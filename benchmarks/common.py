@@ -1,0 +1,96 @@
+"""Shared benchmark scaffolding: synthetic-FEMNIST surrogate FL runs.
+
+The paper's experiments are image classification under non-IID splits; on
+this 1-core CPU host the benchmarks default to an MLP on synthetic
+class-conditional Gaussians (same partitioners, same algorithms, same
+runtime model) which preserves the paper's *relative orderings*. Pass
+--full to run the actual FEMNIST CNN on synthetic images.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.config import FLConfig
+from repro.core.cefedavg import FLSimulator
+from repro.core.runtime import (HardwareProfile, RuntimeModel,
+                                WorkloadProfile)
+from repro.data.federated import (build_fl_data, cluster_partition,
+                                  dirichlet_partition,
+                                  make_synthetic_classification,
+                                  make_synthetic_images)
+from repro.models.cnn import (apply_femnist_cnn, apply_mlp_classifier,
+                              init_femnist_cnn, init_mlp_classifier)
+
+MLP_DIM, MLP_CLASSES = 16, 8
+
+
+def make_data(fl: FLConfig, *, full: bool = False, cluster_iid=None,
+              labels_per_cluster: int = 2, seed: int = 0,
+              noise: float = 2.5, alpha: float = 0.3):
+    # noise/alpha chosen so convergence takes several rounds (otherwise the
+    # separable task converges in one round and time-to-accuracy ties)
+    if full:
+        x, y = make_synthetic_images(2048, 28, 1, 62, seed=seed)
+        tx, ty = make_synthetic_images(512, 28, 1, 62, seed=seed + 1)
+    else:
+        x, y = make_synthetic_classification(1600, MLP_DIM, MLP_CLASSES,
+                                             seed=seed, noise=noise)
+        tx, ty = make_synthetic_classification(400, MLP_DIM, MLP_CLASSES,
+                                               seed=seed + 1, noise=noise)
+    if cluster_iid is None:
+        parts = dirichlet_partition(y, fl.n, alpha, seed)
+    else:
+        parts = cluster_partition(y, fl.num_clusters,
+                                  fl.devices_per_cluster,
+                                  cluster_iid=cluster_iid,
+                                  labels_per_cluster=labels_per_cluster,
+                                  seed=seed)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    return {k: jnp.asarray(v) for k, v in data.items()}
+
+
+def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
+             seed: int = 0) -> FLSimulator:
+    if full:
+        init = lambda k: init_femnist_cnn(k)            # noqa: E731
+        apply = apply_femnist_cnn
+    else:
+        init = lambda k: init_mlp_classifier(k, MLP_DIM, 32,  # noqa: E731
+                                             MLP_CLASSES)
+        apply = apply_mlp_classifier
+    return FLSimulator(init, apply, fl, data, lr=lr, batch_size=16,
+                       seed=seed)
+
+
+def paper_runtime(fl: FLConfig, *, full: bool = False) -> RuntimeModel:
+    """Eq. (8) with the paper's §6.1 constants. The FEMNIST-CNN payload is
+    used even in MLP-surrogate mode: the *learning* dynamics come from the
+    surrogate, but the wall-time question Fig. 2/3 asks is about the
+    paper's 6.6M-parameter uploads over 10/50/1 Mb/s links."""
+    hw = HardwareProfile()  # paper constants (iPhone X, 10/50/1 Mb/s)
+    wl = WorkloadProfile(6_603_710, 13.30e6 * 50 * 3)
+    return RuntimeModel(hw, wl)
+
+
+def time_to_accuracy(hist: Dict, round_time: float,
+                     target: float) -> Optional[float]:
+    for r, a in zip(hist["round"], hist["acc"]):
+        if a >= target:
+            return r * round_time
+    return None
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

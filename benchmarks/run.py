@@ -1,0 +1,205 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,...]
+    fig2  algorithm comparison: accuracy vs round + time-to-accuracy
+    fig3  tau sweep at fixed q*tau
+    fig4  cluster-count (m) sweep
+    fig5  cluster-level IID vs non-IID (C = 2, 5, 8)
+    fig6  backhaul topologies (ring / complete / ER(p))
+    tab1  special-case equivalences (Table 1 / §4.3)
+    kern  kernel-path microbenchmarks (XLA reference wall time, this host)
+    roof  roofline summary from experiments/dryrun (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import (Timer, make_data, make_sim, paper_runtime,
+                               row, time_to_accuracy)  # noqa: E402
+from repro.config import FLConfig  # noqa: E402
+
+ROUNDS = 10
+TARGET = 0.86
+
+
+def _fl(algo="ce_fedavg", m=4, dpc=4, tau=2, q=8, pi=10, topology="ring",
+        **kw):
+    return FLConfig(algorithm=algo, num_clusters=m, devices_per_cluster=dpc,
+                    tau=tau, q=q, pi=pi, topology=topology, **kw)
+
+
+def fig2(full=False):
+    """Fig. 2: CE-FedAvg vs FedAvg / Hier-FAvg / Local-Edge."""
+    for algo, m, dpc in [("ce_fedavg", 4, 4), ("hier_favg", 4, 4),
+                         ("fedavg", 1, 16), ("local_edge", 4, 4)]:
+        fl = _fl(algo, m=m, dpc=dpc)
+        sim = make_sim(fl, make_data(fl, full=full), full=full)
+        with Timer() as t:
+            hist = sim.run(ROUNDS)
+        rt = paper_runtime(fl, full=full).round_time(algo, fl.tau, fl.q,
+                                                     fl.pi)
+        tta = time_to_accuracy(hist, rt, TARGET)
+        row(f"fig2_{algo}", t.dt * 1e6 / ROUNDS,
+            f"final_acc={hist['acc'][-1]:.3f};round_s={rt:.1f};"
+            f"time_to_{TARGET:.0%}={'-' if tta is None else f'{tta:.0f}s'}")
+
+
+def fig3(full=False):
+    """Fig. 3: tau in {2,4,8} at fixed q*tau = 16."""
+    for tau in (2, 4, 8):
+        fl = _fl(tau=tau, q=16 // tau)
+        sim = make_sim(fl, make_data(fl, full=full), full=full)
+        with Timer() as t:
+            hist = sim.run(ROUNDS)
+        rt = paper_runtime(fl, full=full).round_time("ce_fedavg", tau,
+                                                     16 // tau, fl.pi)
+        tta = time_to_accuracy(hist, rt, TARGET)
+        row(f"fig3_tau{tau}", t.dt * 1e6 / ROUNDS,
+            f"final_acc={hist['acc'][-1]:.3f};round_s={rt:.1f};"
+            f"time_to_{TARGET:.0%}={'-' if tta is None else f'{tta:.0f}s'}")
+
+
+def fig4(full=False):
+    """Fig. 4: m in {2,4,8} with n = 16 fixed (paper: n = 64, m<=16)."""
+    n = 16
+    for m in (2, 4, 8):
+        fl = _fl(m=m, dpc=n // m)
+        sim = make_sim(fl, make_data(fl, full=full), full=full)
+        with Timer() as t:
+            hist = sim.run(ROUNDS)
+        row(f"fig4_m{m}", t.dt * 1e6 / ROUNDS,
+            f"final_acc={hist['acc'][-1]:.3f};mean_acc="
+            f"{np.mean(hist['acc']):.3f}")
+
+
+def fig5(full=False):
+    """Fig. 5: cluster-level data distribution (IID vs non-IID C)."""
+    fl = _fl()
+    for label, iid, C in [("iid", True, 0), ("noniid_C2", False, 2),
+                          ("noniid_C5", False, 5)]:
+        data = make_data(fl, full=full, cluster_iid=iid,
+                         labels_per_cluster=max(C, 1))
+        sim = make_sim(fl, data, full=full)
+        with Timer() as t:
+            hist = sim.run(ROUNDS)
+        row(f"fig5_{label}", t.dt * 1e6 / ROUNDS,
+            f"final_acc={hist['acc'][-1]:.3f};mean_acc="
+            f"{np.mean(hist['acc']):.3f}")
+
+
+def fig6(full=False):
+    """Fig. 6: backhaul topology (ring, complete, ER p)."""
+    from repro.core.cefedavg import make_w_schedule
+    for label, topo, p in [("ring", "ring", 0.0),
+                           ("er_p0.2", "erdos_renyi", 0.2),
+                           ("er_p0.6", "erdos_renyi", 0.6),
+                           ("complete", "complete", 0.0)]:
+        fl = _fl(m=8, dpc=2, tau=1, q=1, pi=1, topology=topo, er_prob=p)
+        sched = make_w_schedule(fl)
+        sim = make_sim(fl, make_data(fl, full=full), full=full)
+        with Timer() as t:
+            hist = sim.run(ROUNDS)
+        row(f"fig6_{label}", t.dt * 1e6 / ROUNDS,
+            f"final_acc={hist['acc'][-1]:.3f};zeta={sched.zeta:.3f};"
+            f"mean_acc={np.mean(hist['acc']):.3f}")
+
+
+def tab1(full=False):
+    """Table 1 / §4.3: special-case operator equivalences."""
+    from repro.core.cefedavg import make_w_schedule
+    s_ce = make_w_schedule(_fl("ce_fedavg", topology="complete", pi=1))
+    s_h = make_w_schedule(_fl("hier_favg"))
+    err1 = float(np.abs(s_ce.W_inter - s_h.W_inter).max())
+    s1 = make_w_schedule(_fl("ce_fedavg", m=1, dpc=16))
+    s2 = make_w_schedule(_fl("fedavg", m=1, dpc=16))
+    err2 = float(np.abs(s1.W_inter - s2.W_inter).max())
+    row("tab1_complete_equals_hier", 0.0, f"op_err={err1:.2e}")
+    row("tab1_m1_equals_fedavg", 0.0, f"op_err={err2:.2e}")
+
+
+def kern(full=False):
+    """Kernel-path microbenchmarks (XLA reference path on this host; the
+    Pallas kernels target TPU and are validated interpret-mode in tests)."""
+    import time
+    from repro.models.layers import attention_core
+    from repro.models.ssm import ssd_chunked
+    from repro.core.cefedavg import mix
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (1, 1024, 8, 64), jnp.float32)
+    f = jax.jit(lambda q: attention_core(q, q, q, causal=True))
+    f(q).block_until_ready()
+    with Timer() as t:
+        for _ in range(5):
+            f(q).block_until_ready()
+    row("kern_attention_1k", t.dt / 5 * 1e6, "xla_ref;B1_S1024_H8_D64")
+
+    x = jax.random.normal(k, (1, 1024, 8, 32))
+    dtv = jnp.abs(jax.random.normal(k, (1, 1024, 8))) * 0.1
+    A = -jnp.ones((8,))
+    Bm = jax.random.normal(k, (1, 1024, 32))
+    g = jax.jit(lambda x, d, B: ssd_chunked(x, d, A, B, B, 128)[0])
+    g(x, dtv, Bm).block_until_ready()
+    with Timer() as t:
+        for _ in range(5):
+            g(x, dtv, Bm).block_until_ready()
+    row("kern_ssd_1k", t.dt / 5 * 1e6, "xla_ref;B1_S1024_H8_P32_N32")
+
+    W = jnp.ones((16, 16)) / 16
+    params = {"w": jax.random.normal(k, (16, 1 << 18))}
+    h = jax.jit(lambda p: mix(W, p))
+    h(params)["w"].block_until_ready()
+    with Timer() as t:
+        for _ in range(5):
+            h(params)["w"].block_until_ready()
+    row("kern_gossip_mix_16MB", t.dt / 5 * 1e6, "xla_ref;n16_T262144_f32")
+
+
+def roof(full=False):
+    """Roofline summary from the dry-run records (EXPERIMENTS.md
+    §Roofline); derived field mirrors the per-combination JSON."""
+    recs = sorted(glob.glob("experiments/dryrun/*_16x16.json"))
+    if not recs:
+        row("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for path in recs:
+        r = json.load(open(path))
+        if "terms" not in r:
+            continue
+        t = r["terms"]
+        row(f"roof_{r['arch']}_{r['shape']}", t["roofline_bound_s"] * 1e6,
+            f"bottleneck={t['bottleneck']};comp={t['compute_s']:.3f};"
+            f"mem={t['memory_s']:.3f};coll={t['collective_s']:.3f};"
+            f"useful={r['useful_ratio']:.3f}")
+
+
+BENCHES = {"fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
+           "fig6": fig6, "tab1": tab1, "kern": kern, "roof": roof}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="run the real FEMNIST CNN (slow on CPU)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n](full=args.full)
+
+
+if __name__ == '__main__':
+    main()

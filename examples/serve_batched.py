@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + decode with per-family caches for a
+reduced SSM (mamba2) and a reduced GQA (qwen2) model — the serve path the
+decode_32k / long_500k dry-run shapes lower.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+if __name__ == "__main__":
+    for arch in ("mamba2-2.7b", "qwen2-0.5b"):
+        print(f"\n=== serving {arch} (reduced) ===")
+        serve_main(["--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "16", "--decode-tokens", "8",
+                    "--max-seq", "64"])

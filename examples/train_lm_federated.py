@@ -1,0 +1,86 @@
+"""End-to-end driver: federated training of a ~100M-param qwen2-style LM
+with the *production* sharded CE-FedAvg trainer (the same code path the
+multi-pod dry-run lowers), for a few hundred local steps on CPU.
+
+  PYTHONPATH=src python examples/train_lm_federated.py [--rounds 25]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.config import (ExperimentConfig, FLConfig,  # noqa: E402
+                          TrainConfig)
+from repro.configs import get_model_config  # noqa: E402
+from repro.core.sharded import ShardedCEFedAvg  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=50)  # 200 local steps
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--q", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    # ~100M-param config: qwen2-0.5b family at modest width/depth
+    cfg = dataclasses.replace(
+        get_model_config("qwen2-0.5b"),
+        num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=3072, head_dim=64, vocab_size=32000,
+        dtype="float32", param_dtype="float32")
+    mesh = make_mesh((1, 1), ("data", "model"))  # 1 CPU device
+    exp = ExperimentConfig(
+        model=cfg,
+        fl=FLConfig(num_clusters=1, devices_per_cluster=1, tau=args.tau,
+                    q=args.q, pi=2, topology="ring"),
+        train=TrainConfig(optimizer="adamw", learning_rate=1e-3))
+    tr = ShardedCEFedAvg(exp, mesh)
+    n_params = sum(int(np.prod(s.shape)) for s in
+                   jax.tree.leaves(tr.param_shapes))
+    print(f"model: {n_params/1e6:.1f}M params (stacked over "
+          f"{tr.geo.num_replicas} replica(s))")
+
+    # synthetic next-token task with learnable structure: tok_{t+1} =
+    # (tok_t * 31 + 7) % V on half the stream, uniform noise on the rest
+    def batch_for(step):
+        rng = np.random.default_rng(step)
+        R = tr.geo.num_replicas
+        toks = rng.integers(0, cfg.vocab_size,
+                            (args.q, args.tau, R, args.batch, args.seq),
+                            dtype=np.int64)
+        toks = np.cumsum(toks, axis=-1) * 0 + toks  # keep dtype path simple
+        for t in range(1, args.seq):
+            toks[..., t] = (toks[..., t - 1] * 31 + 7) % cfg.vocab_size
+        labels = np.roll(toks, -1, axis=-1)
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(labels, jnp.int32)}
+
+    with mesh:
+        params, opt = jax.jit(tr.init_fn())(jax.random.PRNGKey(0))
+        round_fn = jax.jit(tr.make_global_round(), donate_argnums=(0, 1))
+        step = jnp.zeros((), jnp.int32)
+        t0 = time.time()
+        for r in range(args.rounds):
+            params, opt, metrics, step = round_fn(params, opt,
+                                                  batch_for(r), step)
+            if r % 5 == 0 or r == args.rounds - 1:
+                print(f"round {r:3d} (local step {int(step):4d}): "
+                      f"loss={float(metrics['loss']):.4f} "
+                      f"[{time.time()-t0:.0f}s]", flush=True)
+    print("done — loss should fall well below ln(V) =",
+          f"{np.log(cfg.vocab_size):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Flat-npz pytree checkpointing (no external deps).
+
+Keys encode the tree path; dtypes/shapes round-trip exactly. Good enough
+for single-host experiment drivers; a real deployment would swap in
+tensorstore/orbax behind the same two functions.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/#{i}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, __meta__=json.dumps(meta or {}),
+             **{k: v for k, v in flat.items()})
+
+
+def load_checkpoint(path: str, like: Any = None):
+    """Returns (tree, meta). If ``like`` is given, reshapes into its
+    structure; otherwise returns the flat {path: array} dict."""
+    z = np.load(path, allow_pickle=False)
+    meta = json.loads(str(z["__meta__"]))
+    flat = {k: z[k] for k in z.files if k != "__meta__"}
+    if like is None:
+        return flat, meta
+    leaves_like, treedef = jax.tree.flatten(like)
+    flat_like = _flatten(like)
+    assert set(flat_like) == set(flat), "checkpoint structure mismatch"
+    ordered = [flat[k] for k in sorted(flat_like)]
+    # tree.flatten of dicts sorts keys, matching _flatten's ordering
+    return jax.tree.unflatten(treedef, ordered), meta

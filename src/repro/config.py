@@ -1,0 +1,219 @@
+"""Configuration system for the CFEL/CE-FedAvg framework.
+
+Plain dataclasses (no external deps). Every assigned architecture provides a
+``ModelConfig`` in ``repro.configs.<id>``; the FL layer, launcher and dry-run
+consume ``ExperimentConfig`` which composes model + FL + mesh + train/serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "cnn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # one of FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int = 0            # 0 for attention-free archs
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    mlp_act: str = "silu"         # silu | gelu | relu2 (nemotron squared relu)
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    use_rope: bool = True         # whisper uses learned positions instead
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    moe_shared_expert: bool = False   # llama4 has a shared expert
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    # --- hybrid (Zamba2-style): one *shared* attention block every k SSM blocks
+    attn_every: int = 0
+    # --- attention locality ---
+    sliding_window: int = 0       # 0 = full attention
+    # --- encoder/decoder (Whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500       # stub audio frontend: #frames after conv
+    # --- VLM (Pixtral): stub vision frontend
+    num_patches: int = 0          # patch embeddings prepended to text
+    # --- beyond-paper performance knobs ---
+    attn_seq_shard: bool = False   # context-parallel attention core: shard
+    #   the query sequence over the model axis (exact; rescues archs whose
+    #   head count is not divisible by the model-parallel degree)
+    moe_local_dispatch: bool = False  # dispatch MoE tokens within each
+    #   batch row (per-device capacity) instead of globally: keeps the
+    #   capacity buffer sharded with the batch — removes the full-buffer
+    #   cross-shard all-reduce the global scatter otherwise lowers to
+    head_pad_to: int = 0           # pad query heads to this count with
+    #   zero-masked (permanently inert) heads so they shard evenly over the
+    #   model axis; mathematically identical outputs, ~heads_pad/heads extra
+    #   attention FLOPs, standard TP collectives
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # --- citation (model card / arXiv that fixes the shape) ---
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic serve path exists (SSM state or sliding window)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A smoke-test-sized variant of the same family (<=2 layers etc.)."""
+        small = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4) if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64 if self.num_heads else 0,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_chunk=64 if self.ssm_state else 256,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=32 if self.encoder_layers else 1500,
+            num_patches=8 if self.num_patches else 0,
+            attn_every=2 if self.attn_every else 0,
+            sliding_window=min(self.sliding_window, 64)
+            if self.sliding_window else 0,
+            dtype="float32",
+            param_dtype="float32",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Federated learning (the paper's knobs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FLConfig:
+    algorithm: str = "ce_fedavg"   # ce_fedavg | fedavg | hier_favg | local_edge | dec_local_sgd
+    num_clusters: int = 4          # m
+    devices_per_cluster: int = 4   # n_i (equal clusters by default)
+    tau: int = 2                   # intra-cluster aggregation period
+    q: int = 8                     # edge rounds per global round
+    pi: int = 10                   # gossip steps per inter-cluster aggregation
+    topology: str = "ring"         # ring | complete | star | torus | erdos_renyi
+    er_prob: float = 0.4           # for erdos_renyi
+    topology_seed: int = 0
+    mixing: str = "metropolis"     # metropolis | uniform_neighbor
+    # sharded-trainer mapping
+    gossip_impl: str = "dense"     # dense (paper-faithful einsum) | sparse (ppermute)
+    cluster_axis: str = "data"     # mesh axis along which replicas/clusters live
+
+    @property
+    def n(self) -> int:
+        return self.num_clusters * self.devices_per_cluster
+
+    def validate(self) -> None:
+        assert self.algorithm in (
+            "ce_fedavg", "fedavg", "hier_favg", "local_edge", "dec_local_sgd")
+        assert self.tau >= 1 and self.q >= 1 and self.pi >= 1
+        assert self.num_clusters >= 1 and self.devices_per_cluster >= 1
+
+
+# ---------------------------------------------------------------------------
+# Mesh / distribution
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+    multi_pod: bool = False
+
+    @property
+    def num_devices(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Train / serve shapes (the four assigned input shapes)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "sgd"        # sgd | adamw
+    learning_rate: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    lr_schedule: str = "constant"  # constant | cosine | warmup_cosine
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    batch_size: int = 50          # per-device local batch (paper: 50)
+    seed: int = 0
+    remat: bool = False           # activation checkpointing for the block
+    use_pallas: bool = False      # route attention/ssd through Pallas kernels
+
+
+@dataclass(frozen=True)
+class ExperimentConfig:
+    model: ModelConfig
+    fl: FLConfig = field(default_factory=FLConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+
+    def replace(self, **kw) -> "ExperimentConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,11 @@
+"""mamba2-2.7b [ssm] — attention-free SSD (state-space duality).
+[arXiv:2405.21060]"""
+from repro.config import ModelConfig
+
+MODEL = ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    num_layers=64, d_model=2560, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+    source="arXiv:2405.21060",
+)

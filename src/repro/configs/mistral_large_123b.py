@@ -1,0 +1,10 @@
+"""mistral-large-123b [dense] — 88L GQA dense.
+[hf:mistralai/Mistral-Large-Instruct-2407]"""
+from repro.config import ModelConfig
+
+MODEL = ModelConfig(
+    name="mistral-large-123b", family="dense",
+    num_layers=88, d_model=12288, num_heads=96, num_kv_heads=8,
+    d_ff=28672, vocab_size=32768, head_dim=128,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)

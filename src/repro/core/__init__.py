@@ -1,0 +1,12 @@
+from repro.core.topology import (  # noqa: F401
+    build_adjacency,
+    mixing_matrix,
+    zeta,
+    omega1,
+    omega2,
+    cluster_assignment,
+    intra_cluster_operator,
+    inter_cluster_operator,
+)
+from repro.core.cefedavg import FLSimulator, make_w_schedule  # noqa: F401
+from repro.core.runtime import RuntimeModel, HardwareProfile  # noqa: F401

@@ -1,0 +1,102 @@
+"""Privacy substrates the paper claims compatibility with (§4.1):
+
+- **Secure aggregation** (Bonawitz et al. [26]): pairwise additive masks
+  that cancel in the intra-cluster sum, so the edge server learns only
+  Σ_k x_k — implementable here because CE-FedAvg's W_t operators only ever
+  consume sums (eq. 6/7).
+- **(Local) differential privacy** ([28]–[30]): per-device L2 clipping +
+  Gaussian noise on the uploaded update, with the standard Gaussian-
+  mechanism accountant for a single release.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation (pairwise masking)
+# ---------------------------------------------------------------------------
+
+def _pair_key(seed: int, i: int, j: int) -> jax.Array:
+    return jax.random.PRNGKey(seed * 1_000_003 + i * 1009 + j)
+
+
+def mask_update(tree: Any, device: int, cluster: List[int], *,
+                seed: int = 0, scale: float = 1.0) -> Any:
+    """Add pairwise-cancelling masks: device k adds +PRG(k,j) for j>k and
+    -PRG(j,k) for j<k (within its cluster). Σ over the cluster is exact."""
+    def mask_leaf(path_idx, leaf):
+        m = jnp.zeros_like(leaf, jnp.float32)
+        for j in cluster:
+            if j == device:
+                continue
+            lo, hi = min(device, j), max(device, j)
+            k = jax.random.fold_in(_pair_key(seed, lo, hi), path_idx)
+            noise = jax.random.normal(k, leaf.shape) * scale
+            m = m + noise if device < j else m - noise
+        return (leaf.astype(jnp.float32) + m).astype(leaf.dtype)
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(
+        treedef, [mask_leaf(i, l) for i, l in enumerate(leaves)])
+
+
+def masked_cluster_sum(trees: List[Any], cluster: List[int], *,
+                       seed: int = 0, scale: float = 1.0) -> Any:
+    """What the edge server computes: Σ of masked updates (== true Σ)."""
+    masked = [mask_update(t, dev, cluster, seed=seed, scale=scale)
+              for t, dev in zip(trees, cluster)]
+    return jax.tree.map(lambda *ls: sum(
+        l.astype(jnp.float32) for l in ls), *masked)
+
+
+# ---------------------------------------------------------------------------
+# differential privacy
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DPConfig:
+    clip_norm: float = 1.0
+    noise_multiplier: float = 0.0   # sigma = noise_multiplier * clip_norm
+
+    @property
+    def enabled(self) -> bool:
+        return self.noise_multiplier > 0.0
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+    n = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * factor
+                                   ).astype(l.dtype), tree)
+
+
+def privatize_update(tree: Any, dp: DPConfig, key: jax.Array) -> Any:
+    """Clip to clip_norm, then add N(0, (noise_multiplier*clip)^2)."""
+    clipped = clip_by_global_norm(tree, dp.clip_norm)
+    if not dp.enabled:
+        return clipped
+    sigma = dp.noise_multiplier * dp.clip_norm
+    leaves, treedef = jax.tree.flatten(clipped)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        (l.astype(jnp.float32)
+         + sigma * jax.random.normal(k, l.shape)).astype(l.dtype)
+        for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def gaussian_epsilon(noise_multiplier: float, delta: float = 1e-5) -> float:
+    """Single-release Gaussian-mechanism bound: eps = sqrt(2 ln(1.25/δ))/σ."""
+    if noise_multiplier <= 0:
+        return float("inf")
+    return float(np.sqrt(2.0 * np.log(1.25 / delta)) / noise_multiplier)

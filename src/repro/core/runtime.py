@@ -1,0 +1,108 @@
+"""Runtime model — paper §4.2 eq. (8) and the baselines' adapted variants.
+
+Total runtime of p global rounds of CE-FedAvg:
+    p * [ max_k qτC/c_k + qW/b_d2e + πW/b_e2e ]
+where C = FLOPs per SGD step, c_k device speed (FLOP/s), W model bits,
+b_d2e device→edge uplink, b_e2e edge↔edge backhaul.
+
+Baselines (paper §6.1 adaptation):
+  FedAvg      p * [ qτC/c + W/b_d2c ]               (cloud aggregation)
+  Hier-FAvg   p * [ qτC/c + (q-1)W/b_d2e + W/b_d2c ]
+  Local-Edge  p * [ qτC/c + qW/b_d2e ]              (no inter-cluster)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+MBPS = 1e6  # bits/s
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    """Paper §6.1 defaults: iPhone X devices, 10 Mb/s uplink,
+    50 Mb/s backhaul, 1 Mb/s device→cloud."""
+    device_flops: float = 691.2e9        # c_k
+    b_d2e: float = 10 * MBPS
+    b_e2e: float = 50 * MBPS
+    b_d2c: float = 1 * MBPS
+    bytes_per_param: int = 4
+
+    @staticmethod
+    def tpu_v5e(chips_per_replica: int = 16) -> "HardwareProfile":
+        """TPU adaptation: replica = a model-parallel group of v5e chips;
+        'uplink' = intra-pod ICI, 'backhaul' = inter-pod DCI."""
+        return HardwareProfile(
+            device_flops=197e12 * chips_per_replica,
+            b_d2e=8 * 50e9 * 8,     # ICI: ~50 GB/s/link, 8 bits/byte
+            b_e2e=25e9 * 8,         # DCI-ish slow tier
+            b_d2c=2.5e9 * 8,
+            bytes_per_param=2,
+        )
+
+
+@dataclass(frozen=True)
+class WorkloadProfile:
+    model_params: int                 # parameter count
+    flops_per_step: float             # C: FLOPs of one SGD step (fwd+bwd)
+
+    @property
+    def model_bits(self) -> float:
+        return self.model_params * 8.0  # placeholder, bytes set by hw
+
+
+class RuntimeModel:
+    def __init__(self, hw: HardwareProfile, wl: WorkloadProfile,
+                 device_speeds: Optional[Sequence[float]] = None):
+        self.hw = hw
+        self.wl = wl
+        self.speeds = list(device_speeds) if device_speeds else None
+
+    def _compute_time(self, steps: int) -> float:
+        slowest = min(self.speeds) if self.speeds else self.hw.device_flops
+        return steps * self.wl.flops_per_step / slowest
+
+    def _bits(self) -> float:
+        return self.wl.model_params * self.hw.bytes_per_param * 8.0
+
+    def round_time(self, algorithm: str, tau: int, q: int, pi: int,
+                   uplink_ratio: float = 1.0) -> float:
+        """Wall time of ONE global round (qτ local steps) under eq. (8).
+
+        ``uplink_ratio`` scales the device→edge payload (compression,
+        core.compress.compression_ratio)."""
+        comp = self._compute_time(q * tau)
+        W = self._bits()
+        Wu = W * uplink_ratio
+        hw = self.hw
+        if algorithm == "ce_fedavg":
+            return comp + q * Wu / hw.b_d2e + pi * W / hw.b_e2e
+        if algorithm == "hier_favg":
+            return comp + (q - 1) * Wu / hw.b_d2e + W / hw.b_d2c
+        if algorithm == "fedavg":
+            return comp + Wu / hw.b_d2c
+        if algorithm == "local_edge":
+            return comp + q * Wu / hw.b_d2e
+        if algorithm == "dec_local_sgd":
+            return comp + pi * W / hw.b_e2e
+        raise ValueError(algorithm)
+
+    def total_time(self, algorithm: str, rounds: int, tau: int, q: int,
+                   pi: int, uplink_ratio: float = 1.0) -> float:
+        return rounds * self.round_time(algorithm, tau, q, pi, uplink_ratio)
+
+
+def convergence_bound(T: int, eta: float, L: float, sigma2: float,
+                      eps2: float, eps_i2: float, n: int, m: int,
+                      tau: int, q: int, z: float, pi: int,
+                      f_gap: float = 1.0) -> float:
+    """Theorem 1 RHS (eq. 23) — used to sanity-check parameter effects."""
+    from repro.core.topology import omega1, omega2
+    o1, o2 = omega1(z, pi), omega2(z, pi)
+    t1 = 2 * f_gap / (eta * T)
+    t2 = eta * L * sigma2 / n
+    t3 = 8 * eta**2 * L**2 * (o1 * q * tau + (m - 1) / n * q * tau) * sigma2
+    t4 = 16 * eta**2 * L**2 * q**2 * tau**2 * o2 * eps2
+    t5 = 8 * (n - m) / n * eta**2 * L**2 * tau * sigma2
+    t6 = 16 * L**2 * eta**2 * tau**2 * eps_i2
+    return t1 + t2 + t3 + t4 + t5 + t6

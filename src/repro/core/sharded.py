@@ -1,0 +1,435 @@
+"""Production CE-FedAvg trainer: stacked federated replicas on a TPU mesh.
+
+Parameters/optimizer state carry a leading replica axis R sharded over the
+mesh's replica axes (``pod`` × ``data``); the ``model`` axis is tensor
+parallel *within* a replica. One ``global_round`` = q edge rounds of
+(τ local SGD steps + intra-cluster averaging) followed by π gossip steps of
+inter-cluster mixing — a literal, sharded implementation of eq. (10)/(11).
+
+Two aggregation backends:
+- ``dense``  (paper-faithful baseline): the full W_t operators applied as a
+  (R,R)·(R,…) contraction over the replica axis — XLA lowers this to
+  all-gathers over the replica axes.
+- ``sparse`` (beyond-paper optimized): shard_map with
+  ``psum(axis_index_groups=clusters)`` for V and π rounds of neighbor
+  ``ppermute`` for H^π on a ring backhaul — O(deg·|θ|) neighbor traffic and
+  O(|θ|) peak memory instead of O(R·|θ|).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.config import ExperimentConfig, FLConfig
+from repro.core.cefedavg import make_w_schedule, mix
+from repro.models import model as mdl
+from repro.optim import make_optimizer, make_lr_schedule
+from repro.optim.optimizers import apply_updates
+
+
+# ---------------------------------------------------------------------------
+# replica geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaGeometry:
+    num_replicas: int          # R
+    num_clusters: int          # M (global)
+    devices_per_cluster: int
+    clusters_per_pod: int
+    num_pods: int
+
+    @staticmethod
+    def build(fl: FLConfig, mesh: Mesh) -> "ReplicaGeometry":
+        data = mesh.shape["data"]
+        pods = mesh.shape.get("pod", 1)
+        R = data * pods
+        M = fl.num_clusters
+        assert R % M == 0, f"{R} replicas not divisible into {M} clusters"
+        dpc = R // M
+        assert data % dpc == 0, "clusters must not span pods"
+        return ReplicaGeometry(R, M, dpc, data // dpc, pods)
+
+    def cluster_of(self, r: int) -> int:
+        return r // self.devices_per_cluster
+
+
+# ---------------------------------------------------------------------------
+# abstract init + logical axes (no allocation — works for 123B params)
+# ---------------------------------------------------------------------------
+
+def abstract_model(model_cfg):
+    """(param ShapeDtypeStructs, logical axes) without allocating."""
+    box = []
+
+    def f(k):
+        p, logical = mdl.init_model(k, model_cfg)
+        box.append(logical)
+        return p
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box[0]
+
+
+def stacked_abstract(model_cfg, R: int):
+    shapes, logical = abstract_model(model_cfg)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((R,) + tuple(s.shape), s.dtype),
+        shapes)
+    logical = sh.prepend_axis(logical, "replica")
+    return stacked, logical
+
+
+# ---------------------------------------------------------------------------
+# sparse (shard_map) aggregation backend
+# ---------------------------------------------------------------------------
+
+def _data_groups(geo: ReplicaGeometry, data_size: int):
+    dpc = geo.devices_per_cluster
+    return [list(range(c * dpc, (c + 1) * dpc))
+            for c in range(data_size // dpc)]
+
+
+def sparse_intra_mix(params, specs, mesh: Mesh, geo: ReplicaGeometry):
+    if geo.devices_per_cluster == 1:
+        return params
+    groups = _data_groups(geo, mesh.shape["data"])
+    inv = 1.0 / geo.devices_per_cluster
+
+    def body(p):
+        return jax.tree.map(
+            lambda x: (jax.lax.psum(x.astype(jnp.float32), "data",
+                                    axis_index_groups=groups) * inv
+                       ).astype(x.dtype), p)
+    return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs, check_vma=False)(params)
+
+
+def sparse_gossip(params, specs, mesh: Mesh, geo: ReplicaGeometry,
+                  H: np.ndarray, pi: int):
+    """π ring-gossip steps via neighbor ppermute (ring backhaul only)."""
+    M = geo.num_clusters
+    if M == 1:
+        return params
+    dpc = geo.devices_per_cluster
+    data = mesh.shape["data"]
+    has_pod = "pod" in mesh.axis_names and geo.num_pods > 1
+    w_self = jnp.asarray([H[c, c] for c in range(M)], jnp.float32)
+    w_right = jnp.asarray([H[c, (c + 1) % M] for c in range(M)], jnp.float32)
+    w_left = (jnp.zeros((M,), jnp.float32) if M == 2 else
+              jnp.asarray([H[c, (c - 1) % M] for c in range(M)], jnp.float32))
+
+    # receive-from-right: my slot gets the value of replica (r + dpc)
+    perm_from_right = [((s + dpc) % data, s) for s in range(data)]
+    perm_from_left = [((s - dpc) % data, s) for s in range(data)]
+
+    def body(p):
+        d_idx = jax.lax.axis_index("data")
+        p_idx = jax.lax.axis_index("pod") if has_pod else 0
+        local_c = d_idx // dpc
+        c = p_idx * geo.clusters_per_pod + local_c
+        on_right_edge = local_c == geo.clusters_per_pod - 1
+        on_left_edge = local_c == 0
+
+        def gossip_step(_, state):
+            q = state
+            def leaf(xf):
+                right = jax.lax.ppermute(xf, "data", perm_from_right)
+                left = jax.lax.ppermute(xf, "data", perm_from_left)
+                if has_pod:
+                    npod = geo.num_pods
+                    # right-edge cluster needs next pod's first cluster
+                    pr = [((s + 1) % npod, s) for s in range(npod)]
+                    pl = [((s - 1) % npod, s) for s in range(npod)]
+                    right_x = jax.lax.ppermute(right, "pod", pr)
+                    left_x = jax.lax.ppermute(left, "pod", pl)
+                    right = jnp.where(on_right_edge, right_x, right)
+                    left = jnp.where(on_left_edge, left_x, left)
+                return w_self[c] * xf + w_right[c] * right + w_left[c] * left
+            return jax.tree.map(leaf, q)
+
+        from repro.flags import analysis_mode
+        q0 = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+        if analysis_mode():  # unroll so cost_analysis counts every step
+            q = q0
+            for i in range(pi):
+                q = gossip_step(i, q)
+        else:
+            q = jax.lax.fori_loop(0, pi, gossip_step, q0)
+        return jax.tree.map(lambda x, o: o.astype(x.dtype), p, q)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs, check_vma=False)(params)
+
+
+def cluster_ring_mix(params, specs, mesh: Mesh, geo: ReplicaGeometry,
+                     H: np.ndarray, pi: int):
+    """Beyond-paper: apply the *exact* inter-cluster operator H^π with
+    (m-1) weighted ring exchanges instead of π gossip rounds.
+
+    After intra-cluster averaging every replica holds its cluster's edge
+    model, so the cluster models can be rotated around a ring while each
+    replica accumulates Σ_c Hπ[c, mine]·y_c on the fly — (m-1)·|θ|
+    neighbor bytes instead of 2π·|θ|, identical result (H^π precomputed
+    host-side, m×m)."""
+    M = geo.num_clusters
+    if M == 1:
+        return params
+    Hpi = jnp.asarray(np.linalg.matrix_power(H, pi), jnp.float32)
+    dpc = geo.devices_per_cluster
+    data = mesh.shape["data"]
+    has_pod = "pod" in mesh.axis_names and geo.num_pods > 1
+    perm_from_right = [((s + dpc) % data, s) for s in range(data)]
+
+    def body(p):
+        d_idx = jax.lax.axis_index("data")
+        p_idx = jax.lax.axis_index("pod") if has_pod else 0
+        local_c = d_idx // dpc
+        c_me = p_idx * geo.clusters_per_pod + local_c
+        on_right_edge = local_c == geo.clusters_per_pod - 1
+
+        def rotate(leaf):
+            nxt = jax.lax.ppermute(leaf, "data", perm_from_right)
+            if has_pod:
+                npod = geo.num_pods
+                pr = [((s + 1) % npod, s) for s in range(npod)]
+                nxt_x = jax.lax.ppermute(nxt, "pod", pr)
+                nxt = jnp.where(on_right_edge, nxt_x, nxt)
+            return nxt
+
+        buf = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+        acc = jax.tree.map(lambda b: Hpi[c_me, c_me] * b, buf)
+        for s in range(1, M):
+            buf = jax.tree.map(rotate, buf)
+            c_src = (c_me + s) % M
+            acc = jax.tree.map(
+                lambda a, b: a + Hpi[c_src, c_me] * b, acc, buf)
+        return jax.tree.map(lambda x, o: o.astype(x.dtype), p, acc)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs, check_vma=False)(params)
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+class ShardedCEFedAvg:
+    """Builds jittable FL step functions + shardings for one experiment."""
+
+    def __init__(self, exp: ExperimentConfig, mesh: Mesh,
+                 loss_fn: Optional[Callable] = None):
+        self.exp = exp
+        self.mesh = mesh
+        self.geo = ReplicaGeometry.build(exp.fl, mesh)
+        self.fl = dataclasses.replace(
+            exp.fl, devices_per_cluster=self.geo.devices_per_cluster)
+        self.sched = make_w_schedule(self.fl)
+        self.model_cfg = exp.model
+        self.loss_fn = loss_fn or (
+            lambda p, b: mdl.lm_loss(self.model_cfg, p, b,
+                                     remat=exp.train.remat))
+        self.opt_init, self.opt_update = make_optimizer(exp.train)
+        self.lr_fn = make_lr_schedule(exp.train)
+        self._build_specs()
+
+    # -- specs ---------------------------------------------------------------
+    def _build_specs(self):
+        R = self.geo.num_replicas
+        self.param_shapes, self.param_logical = stacked_abstract(
+            self.model_cfg, R)
+        self.param_specs = sh.resolve_specs(
+            self.param_shapes, self.param_logical, self.mesh)
+        opt_shapes = jax.eval_shape(
+            lambda p: jax.vmap(self.opt_init)(p), self.param_shapes)
+        # opt leaves mirror params (plus scalar counters -> replicate)
+        self.opt_shapes = opt_shapes
+        self.opt_specs = self._opt_specs(opt_shapes)
+
+    def _opt_specs(self, opt_shapes):
+        pleaves = {tuple(s.shape): spec for s, spec in zip(
+            jax.tree.leaves(self.param_shapes),
+            jax.tree.leaves(self.param_specs,
+                            is_leaf=lambda x: isinstance(x, P)))}
+
+        def one(s):
+            return pleaves.get(tuple(s.shape), P())
+        return jax.tree.map(one, opt_shapes)
+
+    # -- init ----------------------------------------------------------------
+    def init_fn(self):
+        R = self.geo.num_replicas
+
+        def init(key):
+            keys = jax.random.split(key, R)
+            params = jax.vmap(
+                lambda k: mdl.init_model(k, self.model_cfg)[0])(keys)
+            opt = jax.vmap(self.opt_init)(params)
+            return params, opt
+        return init
+
+    # -- mixing --------------------------------------------------------------
+    def _intra(self, params):
+        if self.fl.algorithm == "fedavg":
+            return params  # cloud FedAvg: no intra-cluster boundary
+        if self.exp.fl.gossip_impl in ("sparse", "ringweight"):
+            return sparse_intra_mix(params, self.param_specs, self.mesh,
+                                    self.geo)
+        return mix(self.sched.W_intra, params)
+
+    def _inter(self, params):
+        impl = self.exp.fl.gossip_impl
+        if impl in ("sparse", "ringweight") and \
+                self.fl.algorithm == "ce_fedavg":
+            assert self.fl.topology == "ring", \
+                "sparse/ringweight gossip backends assume a ring backhaul"
+            params = sparse_intra_mix(params, self.param_specs, self.mesh,
+                                      self.geo)
+            if impl == "ringweight":
+                return cluster_ring_mix(params, self.param_specs, self.mesh,
+                                        self.geo, self.sched.H, self.fl.pi)
+            return sparse_gossip(params, self.param_specs, self.mesh,
+                                 self.geo, self.sched.H, self.fl.pi)
+        return mix(self.sched.W_inter, params)
+
+    # -- the steps -----------------------------------------------------------
+    def make_global_round(self):
+        """fn(params, opt_state, batch, step) -> (params, opt, metrics, step)
+
+        batch: dict of arrays with leading (q, tau, R, ...) dims.
+        """
+        fl = self.fl
+        loss_fn = self.loss_fn
+
+        def replica_loss(params, mb):
+            losses = jax.vmap(loss_fn)(params, mb)
+            return jnp.sum(losses), losses
+
+        grad_fn = jax.value_and_grad(replica_loss, has_aux=True)
+
+        def local_step(carry, mb):
+            params, opt, step = carry
+            (_, losses), grads = grad_fn(params, mb)
+            lr = self.lr_fn(step)
+            upd, opt = jax.vmap(
+                self.opt_update, in_axes=(0, 0, 0, None)
+            )(grads, opt, params, lr)
+            params = apply_updates(params, upd)
+            return (params, opt, step + 1), jnp.mean(losses)
+
+        def edge_round(carry, ebatch):
+            carry, losses = jax.lax.scan(local_step, carry, ebatch)
+            params, opt, step = carry
+            params = self._intra(params)
+            return (params, opt, step), losses
+
+        def global_round(params, opt, batch, step):
+            (params, opt, step), losses = jax.lax.scan(
+                edge_round, (params, opt, step), batch)
+            params = self._inter(params)
+            return params, opt, {"loss": jnp.mean(losses)}, step
+
+        return global_round
+
+    # -- component steps (analysis-mode lowering units) -----------------------
+    def make_local_step(self):
+        """One local SGD step on one microbatch (R,B,...); no mixing."""
+        loss_fn = self.loss_fn
+
+        def replica_loss(params, mb):
+            losses = jax.vmap(loss_fn)(params, mb)
+            return jnp.sum(losses), losses
+
+        grad_fn = jax.value_and_grad(replica_loss, has_aux=True)
+
+        def local_step(params, opt, mb, step):
+            (_, losses), grads = grad_fn(params, mb)
+            lr = self.lr_fn(step)
+            upd, opt = jax.vmap(
+                self.opt_update, in_axes=(0, 0, 0, None)
+            )(grads, opt, params, lr)
+            params = apply_updates(params, upd)
+            return params, opt, jnp.mean(losses), step + 1
+        return local_step
+
+    def make_intra_fn(self):
+        return lambda params: self._intra(params)
+
+    def make_inter_fn(self):
+        return lambda params: self._inter(params)
+
+    def microbatch_specs(self, mb_shapes) -> Any:
+        """Specs for (R, B, ...) microbatches."""
+        raxes = sh.replica_axes(self.mesh)
+        rspec = tuple(raxes) if len(raxes) > 1 else (raxes[0] if raxes
+                                                     else None)
+
+        def one(s):
+            return P(rspec, *([None] * (len(s.shape) - 1)))
+        return jax.tree.map(one, mb_shapes)
+
+    # -- sharding helpers for jit --------------------------------------------
+    def batch_specs(self, batch_shapes) -> Any:
+        """Specs for (q, tau, R, B, ...) batches: R over replica axes."""
+        raxes = sh.replica_axes(self.mesh)
+        rspec = tuple(raxes) if len(raxes) > 1 else (raxes[0] if raxes
+                                                     else None)
+
+        def one(s):
+            return P(None, None, rspec, *([None] * (len(s.shape) - 3)))
+        return jax.tree.map(one, batch_shapes)
+
+    def in_shardings(self, batch_shapes):
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda p: NamedSharding(self.mesh, p), t,
+            is_leaf=lambda x: isinstance(x, P))
+        return (ns(self.param_specs), ns(self.opt_specs),
+                ns(self.batch_specs(batch_shapes)),
+                NamedSharding(self.mesh, P()))
+
+    def out_shardings(self):
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda p: NamedSharding(self.mesh, p), t,
+            is_leaf=lambda x: isinstance(x, P))
+        return (ns(self.param_specs), ns(self.opt_specs),
+                NamedSharding(self.mesh, P()),
+                NamedSharding(self.mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# serving (non-FL: global/edge model)
+# ---------------------------------------------------------------------------
+
+def make_prefill_fn(model_cfg):
+    def prefill(params, batch):
+        logits, _ = mdl.forward(model_cfg, params, batch)
+        return logits
+    return prefill
+
+
+def make_decode_fn(model_cfg):
+    def decode(params, cache, tokens, pos):
+        return mdl.decode_step(model_cfg, params, cache, tokens, pos)
+    return decode
+
+
+def serve_specs(model_cfg, mesh: Mesh, batch: int, seq: int):
+    """(param specs, cache specs) for single-model serving."""
+    shapes, logical = abstract_model(model_cfg)
+    pspecs = sh.resolve_specs(shapes, logical, mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: mdl.init_decode_cache(model_cfg, batch, seq)[0])
+    _, cache_logical = mdl.init_decode_cache(model_cfg, 1, 1)
+    # decode cache sharding: batch over data when divisible, else kv_seq
+    rules = dict(sh.DEFAULT_RULES)
+    if batch % mesh.shape["data"] != 0:
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    cspecs = sh.resolve_specs(cache_shapes, cache_logical, mesh, rules)
+    return shapes, pspecs, cache_shapes, cspecs

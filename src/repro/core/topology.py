@@ -1,0 +1,172 @@
+"""Edge-backhaul topologies and gossip mixing matrices (paper §3-§4).
+
+The mixing matrix H must satisfy Assumption 4: supported on the graph,
+doubly stochastic, symmetric, with spectral gap 1 - ζ > 0. We use
+Metropolis–Hastings weights, which satisfy all of these for any connected
+undirected graph.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# graphs
+# ---------------------------------------------------------------------------
+
+def ring(m: int) -> np.ndarray:
+    adj = np.zeros((m, m), bool)
+    for i in range(m):
+        adj[i, (i + 1) % m] = adj[(i + 1) % m, i] = True
+    if m == 1:
+        adj[0, 0] = False
+    return adj
+
+
+def complete(m: int) -> np.ndarray:
+    adj = np.ones((m, m), bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def star(m: int) -> np.ndarray:
+    adj = np.zeros((m, m), bool)
+    adj[0, 1:] = adj[1:, 0] = True
+    return adj
+
+
+def torus(m: int) -> np.ndarray:
+    side = int(round(np.sqrt(m)))
+    assert side * side == m, "torus requires a square number of nodes"
+    adj = np.zeros((m, m), bool)
+    for r in range(side):
+        for c in range(side):
+            i = r * side + c
+            for j in ((r, (c + 1) % side), ((r + 1) % side, c)):
+                jj = j[0] * side + j[1]
+                if jj != i:
+                    adj[i, jj] = adj[jj, i] = True
+    return adj
+
+
+def erdos_renyi(m: int, p: float, seed: int = 0) -> np.ndarray:
+    """Connected ER graph (resample until connected, as in the paper's
+    experiments with p in {0.2, 0.4, 0.6})."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        adj = rng.random((m, m)) < p
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        if _connected(adj):
+            return adj
+    # fall back: superimpose a ring to guarantee connectivity
+    return adj | ring(m)
+
+
+def _connected(adj: np.ndarray) -> bool:
+    m = adj.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        i = frontier.pop()
+        for j in np.nonzero(adj[i])[0]:
+            if j not in seen:
+                seen.add(int(j))
+                frontier.append(int(j))
+    return len(seen) == m
+
+
+TOPOLOGIES = {
+    "ring": lambda m, cfg=None: ring(m),
+    "complete": lambda m, cfg=None: complete(m),
+    "star": lambda m, cfg=None: star(m),
+    "torus": lambda m, cfg=None: torus(m),
+    "erdos_renyi": lambda m, cfg=None: erdos_renyi(
+        m, cfg.er_prob if cfg else 0.4, cfg.topology_seed if cfg else 0),
+}
+
+
+def build_adjacency(name: str, m: int, cfg=None) -> np.ndarray:
+    if name not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {name!r}")
+    adj = TOPOLOGIES[name](m, cfg)
+    assert _connected(adj) or m == 1, f"{name}({m}) not connected"
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# mixing matrices
+# ---------------------------------------------------------------------------
+
+def mixing_matrix(adj: np.ndarray, kind: str = "metropolis") -> np.ndarray:
+    """Doubly-stochastic symmetric H supported on the graph (Assumption 4)."""
+    m = adj.shape[0]
+    if m == 1:
+        return np.ones((1, 1))
+    deg = adj.sum(1)
+    H = np.zeros((m, m))
+    if kind == "metropolis":
+        for i in range(m):
+            for j in np.nonzero(adj[i])[0]:
+                H[i, j] = 1.0 / (max(deg[i], deg[j]) + 1.0)
+        np.fill_diagonal(H, 1.0 - H.sum(1))
+    elif kind == "uniform_neighbor":
+        dmax = deg.max()
+        H = adj / (dmax + 1.0)
+        np.fill_diagonal(H, 1.0 - H.sum(1))
+    else:
+        raise ValueError(kind)
+    assert np.all(H >= -1e-12)
+    return H
+
+
+def zeta(H: np.ndarray) -> float:
+    """ζ = max(|λ2|, |λm|) — second-largest eigenvalue magnitude."""
+    ev = np.sort(np.abs(np.linalg.eigvalsh(H)))
+    return float(ev[-2]) if len(ev) > 1 else 0.0
+
+
+def omega1(z: float, pi: int) -> float:
+    zp = z ** (2 * pi)
+    return zp / (1.0 - zp) if zp < 1 else np.inf
+
+
+def omega2(z: float, pi: int) -> float:
+    zp = z ** pi
+    if zp >= 1:
+        return np.inf
+    return 1.0 / (1.0 - zp * zp) + 2.0 / (1.0 - zp) + zp / (1.0 - zp) ** 2
+
+
+# ---------------------------------------------------------------------------
+# cluster operators (paper eq. 11)
+# ---------------------------------------------------------------------------
+
+def cluster_assignment(cluster_sizes) -> np.ndarray:
+    """B in {0,1}^{m x n}: B[i,k]=1 iff device k in cluster i (contiguous)."""
+    m = len(cluster_sizes)
+    n = int(sum(cluster_sizes))
+    B = np.zeros((m, n))
+    k = 0
+    for i, s in enumerate(cluster_sizes):
+        B[i, k:k + s] = 1.0
+        k += s
+    return B
+
+
+def intra_cluster_operator(cluster_sizes) -> np.ndarray:
+    """V = B^T diag(c) B — within-cluster averaging (n x n)."""
+    B = cluster_assignment(cluster_sizes)
+    c = 1.0 / np.asarray(cluster_sizes, float)
+    return B.T @ np.diag(c) @ B
+
+
+def inter_cluster_operator(cluster_sizes, H: np.ndarray,
+                           pi: int) -> np.ndarray:
+    """B^T diag(c) H^pi B — cluster averaging followed by pi gossip steps."""
+    B = cluster_assignment(cluster_sizes)
+    c = 1.0 / np.asarray(cluster_sizes, float)
+    Hp = np.linalg.matrix_power(H, pi)
+    return B.T @ np.diag(c) @ Hp @ B

@@ -1,0 +1,9 @@
+from repro.data.federated import (  # noqa: F401
+    dirichlet_partition,
+    shard_by_label,
+    cluster_partition,
+    make_synthetic_classification,
+    make_synthetic_images,
+    build_fl_data,
+)
+from repro.data.lm import synthetic_lm_batch, TokenStream  # noqa: F401

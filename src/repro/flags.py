@@ -1,0 +1,28 @@
+"""Process-wide analysis-mode switch.
+
+``cost_analysis()`` on XLA modules counts each ``while`` body exactly once
+(verified empirically), so the dry-run's roofline pass lowers an *analysis
+variant* of each step: layer scans fully unrolled and attention forced onto
+the non-streaming path, leaving no compute inside a while loop. Production
+artifacts keep scans (small HLO, honest memory analysis).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def analysis_mode() -> bool:
+    return getattr(_state, "analysis", False)
+
+
+@contextlib.contextmanager
+def analysis(enabled: bool = True):
+    prev = analysis_mode()
+    _state.analysis = enabled
+    try:
+        yield
+    finally:
+        _state.analysis = prev

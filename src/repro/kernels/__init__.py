@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical layers (DESIGN.md §6):
+
+flash_attention  tiled online-softmax attention (prefill hot spot)
+ssd_scan         Mamba-2 SSD intra-chunk block
+gossip_mix       fused W-mixing over stacked replica params (CE-FedAvg)
+quantize         blocked int8 uplink quantization
+
+Each has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py
+(quantize carries its own); tests sweep shapes/dtypes in interpret mode.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,74 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU hosts the kernels execute in interpret mode (kernel body run in
+Python) for correctness validation; on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gossip_mix as _gm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def flash_attention_bshd(q, k, v, *, causal=True, window=0,
+                         interpret=None):
+    """(B,S,H,D) layout adapter with GQA kv expansion, matching
+    repro.models.layers.attention_core semantics."""
+    B, Sq, H, D = q.shape
+    hk = k.shape[2]
+    rep = H // hk
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    o = flash_attention(qt, kt, vt, causal=causal, window=window,
+                        interpret=interpret)
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, a_t, Bc, Cc, dtc, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd.ssd_intra_chunk(x, a_t, Bc, Cc, dtc, interpret=interpret)
+
+
+def ssd_intra_fn(interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd.make_intra_fn(interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gossip_mix_flat(W, Y, block=2048, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _gm.gossip_mix_flat(W, Y, block=block, interpret=interpret)
+
+
+def gossip_mix_tree(W, params, block=2048, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _gm.gossip_mix_tree(W, params, block=block, interpret=interpret)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q/k/v: (BH, S, D) — direct softmax attention."""
+    D = q.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(q.shape[1])
+    k_pos = jnp.arange(k.shape[1])
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(x, a_t, Bc, Cc, dtc):
+    """x: (BK,H,C,P); a_t/dtc: (BK,H,C); Bc/Cc: (BK,C,N).
+    Returns (y_intra (BK,H,C,P) f32, states (BK,H,N,P) f32)."""
+    xf = x.astype(jnp.float32)
+    a = a_t.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    dt = dtc.astype(jnp.float32)
+    C = x.shape[2]
+    cum = jnp.cumsum(a, axis=-1)                      # (BK,H,C)
+    diff = cum[..., :, None] - cum[..., None, :]      # (BK,H,C,C)
+    mask = jnp.tril(jnp.ones((C, C), bool))
+    L = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bin,bjn->bij", Cf, Bf)       # (BK,C,C)
+    att = scores[:, None] * L * dt[..., None, :]      # (BK,H,C,C)
+    y = jnp.einsum("bhij,bhjp->bhip", att, xf)
+    decay_end = jnp.exp(cum[..., -1:] - cum)          # (BK,H,C)
+    states = jnp.einsum("bjn,bhj,bhjp->bhnp", Bf, decay_end * dt, xf)
+    return y, states
+
+
+def gossip_mix_ref(W, Y):
+    """Y: (n, T); returns WᵀY."""
+    return (W.astype(jnp.float32).T @ Y.astype(jnp.float32)).astype(Y.dtype)

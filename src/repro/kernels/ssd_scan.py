@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block.
+
+Per (batch·chunk, head) grid cell, computes in VMEM:
+    L[i,j]   = exp(cumsum(a)[i] - cumsum(a)[j])        (i >= j, else 0)
+    scores   = C_chunk @ B_chunkᵀ                       (C×C on the MXU)
+    y_intra  = (scores ∘ L ∘ dt_j) @ X                  (C×P on the MXU)
+    state_k  = (B ∘ decay_to_end ∘ dt)ᵀ @ X             (N×P on the MXU)
+The inter-chunk linear recurrence stays a lax.scan outside the kernel
+(negligible FLOPs). Chunk length is a multiple of 128 for MXU alignment.
+
+Validated on CPU with interpret=True against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, dt_ref, y_ref, st_ref):
+    # shapes: x (1,1,C,P)  a (1,1,C)  b/c (1,C,N)  dt (1,1,C)
+    x = x_ref[0, 0].astype(jnp.float32)          # (C, P)
+    a = a_ref[0, 0].astype(jnp.float32)          # (C,)
+    Bm = b_ref[0].astype(jnp.float32)            # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (C, N)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (C,)
+
+    C = x.shape[0]
+    cum = jnp.cumsum(a)                          # (C,)
+    diff = cum[:, None] - cum[None, :]           # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    att = scores * L * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum)           # (C,)
+    wB = Bm * (decay_end * dt)[:, None]          # (C, N)
+    st = jax.lax.dot_general(wB, x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    st_ref[0, 0] = st
+
+
+def ssd_intra_chunk(x: jax.Array, a_t: jax.Array, Bc: jax.Array,
+                    Cc: jax.Array, dtc: jax.Array, *,
+                    interpret: bool = False):
+    """x: (BK, H, C, P); a_t/dtc: (BK, H, C); Bc/Cc: (BK, C, N).
+
+    Returns (y_intra (BK, H, C, P) f32, states (BK, H, N, P) f32).
+    """
+    BK, H, C, P = x.shape
+    N = Bc.shape[-1]
+    out_y = jax.ShapeDtypeStruct((BK, H, C, P), jnp.float32)
+    out_s = jax.ShapeDtypeStruct((BK, H, N, P), jnp.float32)
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=(BK, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, C, P), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, C, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, 1, C), lambda b, h: (b, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, C, P), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[out_y, out_s],
+        interpret=interpret,
+    )(x, a_t, Bc, Cc, dtc)
+    return y, st
+
+
+def make_intra_fn(interpret: bool = False):
+    """Adapter matching repro.models.ssm.ssd_chunked's ``intra_fn`` hook:
+    (xc (B,K,C,H,P), a_t (B,K,H,C), Bc (B,K,C,N), Cc, dtc (B,K,C,H))
+    -> y_intra (B,K,C,H,P) f32."""
+    def intra(xc, a_t, Bc, Cc, dtc):
+        B, K, C, H, P = xc.shape
+        N = Bc.shape[-1]
+        x = xc.transpose(0, 1, 3, 2, 4).reshape(B * K, H, C, P)
+        a = a_t.reshape(B * K, H, C)
+        dt = dtc.transpose(0, 1, 3, 2).reshape(B * K, H, C)
+        Bc2 = Bc.reshape(B * K, C, N)
+        Cc2 = Cc.reshape(B * K, C, N)
+        y, _ = ssd_intra_chunk(x, a, Bc2, Cc2, dt, interpret=interpret)
+        return y.reshape(B, K, H, C, P).transpose(0, 1, 3, 2, 4)
+    return intra

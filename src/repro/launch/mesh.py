@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+All functions (never module-level constants) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices, have {len(devices)}; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    dev = np.asarray(devices[:ndev]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary (test-sized) mesh over the first prod(shape) devices."""
+    ndev = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def initialize_multihost(coordinator_address: str | None = None,
+                         num_processes: int | None = None,
+                         process_id: int | None = None) -> None:
+    """Real-cluster entry point: call before any other jax use on each host
+    of a pod slice. On Cloud TPU all arguments are auto-detected from the
+    environment; on other clusters pass them explicitly (or set
+    JAX_COORDINATOR_ADDRESS / JAX_NUM_PROCESSES / JAX_PROCESS_ID)."""
+    import os as _os
+    kw = {}
+    if coordinator_address or _os.environ.get("JAX_COORDINATOR_ADDRESS"):
+        kw["coordinator_address"] = (
+            coordinator_address or _os.environ["JAX_COORDINATOR_ADDRESS"])
+        kw["num_processes"] = num_processes or int(
+            _os.environ["JAX_NUM_PROCESSES"])
+        kw["process_id"] = process_id or int(_os.environ["JAX_PROCESS_ID"])
+    jax.distributed.initialize(**kw)

@@ -1,0 +1,122 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
+records written by repro.launch.dryrun.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = ["whisper-medium", "zamba2-2.7b", "qwen2.5-14b", "mamba2-2.7b",
+              "pixtral-12b", "qwen2-0.5b", "minitron-8b", "mixtral-8x7b",
+              "mistral-large-123b", "llama4-maverick-400b-a17b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def _fmt_b(x: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def load(dirname: str, mesh: str, suffix: str = "") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, f"*_{mesh}{suffix}.json"))):
+        base = os.path.basename(p)[:-5]
+        tag = base.split(f"_{mesh}")[1]
+        if tag != suffix:
+            continue
+        recs.append(json.load(open(p)))
+    recs.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    return recs
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "useful (6N·D/HLO) | what moves the dominant term |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "terms" not in r:
+            continue
+        t = r["terms"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(t['compute_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"**{t['bottleneck']}** | {r['useful_ratio']:.3f} | "
+            f"{advice(r)} |")
+    return "\n".join(out)
+
+
+def advice(r: Dict) -> str:
+    t = r["terms"]
+    arch = r["arch"]
+    heads_bad = arch in ("qwen2.5-14b", "qwen2-0.5b",
+                         "llama4-maverick-400b-a17b")
+    if t["bottleneck"] == "memory":
+        if r["kind"] == "train":
+            return ("flash-tile residency + remat keeps activations in "
+                    "VMEM; CPU-HLO fusion pessimism inflates this term")
+        return "KV-cache layout: shard kv_seq, fuse logits gather"
+    if t["bottleneck"] == "collective":
+        if r["kind"] == "train":
+            return "sparse ppermute gossip instead of dense W_t all-gather"
+        return "reduce TP all-reduces: fuse qkv/out projections"
+    if heads_bad and r["kind"] != "decode":
+        return "14/40 heads not divisible by 16: pad heads or context-par."
+    return "MXU-align tiles; overlap collectives with compute"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | per-dev peak mem | HLO flops/dev | "
+           "coll bytes/dev | compile |",
+           "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mem = r.get("memory", {}).get("peak_bytes_per_device")
+        prod = r.get("production", {})
+        flops = r.get("flops_per_device") or prod.get("flops", 0)
+        coll = (r.get("collective_bytes_per_device")
+                if "collective_bytes_per_device" in r
+                else prod.get("coll_bytes", 0))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{_fmt_b(mem) if mem else 'n/a'} | "
+            f"{flops:.3g} | "
+            f"{_fmt_b(coll)} | "
+            f"{prod.get('compile_s', '?')}s |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--suffix", default="")
+    ap.add_argument("--table", choices=("roofline", "dryrun"),
+                    default="roofline")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh, args.suffix)
+    if args.table == "roofline":
+        print(roofline_table(recs))
+    else:
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (per assignment): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI. ``compiled.cost_analysis()`` on an SPMD-partitioned
+module reports PER-DEVICE flops/bytes (verified empirically: a (1024x1024)
+matmul on 8 devices reports 1/8 of the full FLOPs), so the three terms are
+
+    compute    = flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+which is algebraically identical to the assignment's
+``HLO_total / (chips × peak)`` form. Collective bytes are not in
+cost_analysis: we parse the post-SPMD HLO text and sum the shapes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Iterable, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute"
+    r"|all-gather-start|all-reduce-start|collective-permute-start)\(",
+    re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output bytes of every collective op in a (per-device) HLO module.
+
+    'done' halves of async pairs are skipped (the 'start' carries the shape).
+    """
+    per_kind: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        out_type, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        b = _shape_bytes(out_type)
+        per_kind[kind] = per_kind.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return dict(ca)
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_bytes_dev: float) -> Dict[str, float]:
+    compute = flops_dev / PEAK_FLOPS
+    memory = bytes_dev / HBM_BW
+    coll = coll_bytes_dev / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(compute, memory, coll)
+    terms["roofline_bound_s"] = total
+    return terms
+
+
+def model_flops(cfg, params, kind: str, tokens: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), with N = active
+    params for MoE (experts scaled by k/E, shared expert kept whole)."""
+    import jax
+    expert_n = 0
+    total_n = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total_n += n
+        if "moe" in keys and "shared" not in keys and any(
+                k in ("w_gate", "w_up", "w_out") for k in keys):
+            expert_n += n
+    if cfg.num_experts:
+        frac = cfg.experts_per_token / cfg.num_experts
+        active = total_n - expert_n + expert_n * frac
+    else:
+        active = total_n
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * tokens, total_n, active
+
+
+def summarize(record: Dict[str, Any]) -> str:
+    t = record["terms"]
+    return (f"{record['arch']:26s} {record['shape']:12s} "
+            f"{record['mesh']:9s} comp={t['compute_s']:9.4f}s "
+            f"mem={t['memory_s']:9.4f}s coll={t['collective_s']:9.4f}s "
+            f"-> {t['bottleneck']:10s} useful={record['useful_ratio']:.3f}")

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input shape) combo.
+
+``input_specs`` returns abstract inputs only — no device allocation — which
+is what the multi-pod dry-run lowers against. Modality frontends are stubs
+per the assignment carve-out: audio provides frame embeddings, VLM provides
+patch embeddings, both already at d_model width.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ExperimentConfig, ModelConfig, ShapeConfig
+from repro.models import model as mdl
+
+
+def train_batch_shapes(exp: ExperimentConfig, shape: ShapeConfig,
+                       R: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """(q, tau, R, B_local, ...) abstract batch for one global round."""
+    cfg = exp.model
+    q, tau = exp.fl.q, exp.fl.tau
+    assert shape.global_batch % R == 0, (shape.global_batch, R)
+    B = shape.global_batch // R
+    S = shape.seq_len
+    lead = (q, tau, R, B)
+    act = jnp.dtype(cfg.dtype)
+
+    def tok(s):
+        return jax.ShapeDtypeStruct(lead + s, jnp.int32)
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        s_text = S - cfg.num_patches
+        out["tokens"] = tok((s_text,))
+        out["labels"] = tok((s_text,))
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.num_patches, cfg.d_model), act)
+    elif cfg.family == "encdec":
+        out["tokens"] = tok((S,))
+        out["labels"] = tok((S,))
+        out["frames"] = jax.ShapeDtypeStruct(
+            lead + (cfg.encoder_seq, cfg.d_model), act)
+    else:
+        out["tokens"] = tok((S,))
+        out["labels"] = tok((S,))
+    return out
+
+
+def prefill_batch_shapes(cfg: ModelConfig, shape: ShapeConfig
+                         ) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.num_patches),
+                                             jnp.int32)
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), act)
+    elif cfg.family == "encdec":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), act)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return out
+
+
+def decode_input_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache_shapes, tokens, pos) abstract inputs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: mdl.init_decode_cache(cfg, B, S)[0])
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache_shapes, tokens, pos

@@ -1,0 +1,7 @@
+from repro.models.model import (  # noqa: F401
+    init_model,
+    forward,
+    lm_loss,
+    init_decode_cache,
+    decode_step,
+)

@@ -1,0 +1,342 @@
+"""Core neural-net layers, pure JAX (param dicts + logical sharding axes).
+
+Every ``init_*`` returns ``(params, logical)`` where ``logical`` mirrors the
+param pytree with tuples of logical axis names (see repro.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, fan_in: int, shape, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def pad_to_multiple(n: int, m: int = 256) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int) -> Tuple[Params, Params]:
+    p: Params = {"scale": jnp.ones((d,), _dtype(cfg))}
+    l: Params = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+        l["bias"] = ("embed",)
+    return p, l
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = theta ** (-freq / half)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    ang = ang[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d: int, ff: int) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    if cfg.mlp_act == "relu2":  # nemotron/minitron: squared-relu, no gate
+        p = {"w_in": dense_init(ks[0], d, (d, ff), dt),
+             "w_out": dense_init(ks[1], ff, (ff, d), dt)}
+        l = {"w_in": ("embed", "ff"), "w_out": ("ff", "embed")}
+    elif cfg.mlp_act == "gelu":  # whisper-style: single path + bias
+        p = {"w_in": dense_init(ks[0], d, (d, ff), dt),
+             "b_in": jnp.zeros((ff,), dt),
+             "w_out": dense_init(ks[1], ff, (ff, d), dt),
+             "b_out": jnp.zeros((d,), dt)}
+        l = {"w_in": ("embed", "ff"), "b_in": ("ff",),
+             "w_out": ("ff", "embed"), "b_out": ("embed",)}
+    else:  # silu gated (llama-family)
+        p = {"w_gate": dense_init(ks[0], d, (d, ff), dt),
+             "w_up": dense_init(ks[1], d, (d, ff), dt),
+             "w_out": dense_init(ks[2], ff, (ff, d), dt)}
+        l = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+             "w_out": ("ff", "embed")}
+    return p, l
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_in"]))
+        return h @ p["w_out"]
+    if cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+        return h @ p["w_out"] + p["b_out"]
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_out"]
+
+
+def mlp_apply_fns(cfg: ModelConfig):
+    return lambda p, x: apply_mlp(cfg, p, x)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias / sliding window / cross-attention)
+# ---------------------------------------------------------------------------
+
+def padded_heads(cfg: ModelConfig) -> int:
+    return max(cfg.head_pad_to, cfg.num_heads) if cfg.head_pad_to \
+        else cfg.num_heads
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False
+                   ) -> Tuple[Params, Params]:
+    d, h, hk = cfg.d_model, padded_heads(cfg), cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, (d, h, hd), dt),
+        "wk": dense_init(ks[1], d, (d, hk, hd), dt),
+        "wv": dense_init(ks[2], d, (d, hk, hd), dt),
+        "wo": dense_init(ks[3], h * hd, (h, hd, d), dt),
+    }
+    l: Params = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((hk, hd), dt)
+        p["bv"] = jnp.zeros((hk, hd), dt)
+        l["bq"] = ("heads", "head_dim")
+        l["bk"] = ("kv_heads", "head_dim")
+        l["bv"] = ("kv_heads", "head_dim")
+    return p, l
+
+
+def qkv_project(cfg: ModelConfig, p: Params, x: jax.Array,
+                kv_input: Optional[jax.Array] = None):
+    """Returns q,k,v with shapes (B,S,H,D), (B,Skv,Hkv,D), (B,Skv,Hkv,D)."""
+    kv_in = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B,S,Hkv,D) -> (B,S,H,D) by repeating kv heads (GQA)."""
+    hk = k.shape[-2]
+    rep = num_heads // hk
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=-2)
+
+
+def _band_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+               window: int) -> jax.Array:
+    """True where attention is allowed. q_pos (Sq,), k_pos (Sk,)."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    return ok
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: int = 0,
+                   q_offset: int = 0,
+                   block_q: int = 1024, block_k: int = 1024) -> jax.Array:
+    """Numerically-stable attention; online-softmax block streaming when the
+    sequence is long (never materializes the SxS score matrix).
+
+    q: (B,Sq,H,D)  k/v: (B,Sk,Hkv,D) -> (B,Sq,H,D)
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = 1.0 / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+
+    from repro.flags import analysis_mode
+    if analysis_mode():
+        # fewer, larger tiles: same matmul volume, 16x fewer HLO ops after
+        # unrolling (compile time on the 1-core dry-run host)
+        block_q = block_k = 2048
+    if Sq <= 2048 and Sk <= 2048:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        mask = _band_mask(q_pos, k_pos, causal=causal, window=window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", pr, v)
+
+    # --- flash-style double scan (XLA path; Pallas kernel mirrors this) ---
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, block_q, H, D).transpose(1, 0, 2, 3, 4)
+    kb = kp.reshape(B, nk, block_k, H, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, block_k, H, D).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk
+        qpos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def k_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blk
+            kpos = kj * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk
+                           ).astype(jnp.float32) * scale
+            valid = _band_mask(qpos, kpos, causal=causal, window=window)
+            valid &= (kpos < Sk)[None, :]
+            s = jnp.where(valid[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            pexp = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + pexp.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", pexp.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kb, vb),
+            unroll=nk if analysis_mode() else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb),
+                           unroll=nq if analysis_mode() else 1)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, nq * block_q, H, D)
+    return out[:, :Sq]
+
+
+def _mask_padded_heads(cfg: ModelConfig, out: jax.Array) -> jax.Array:
+    """Zero the outputs (and thereby all gradients) of padded heads, so
+    padding is permanently inert. Padding is interleaved per GQA group
+    (slot % rep_new >= rep_old masked) so every real head keeps its
+    original kv-head assignment."""
+    hp = padded_heads(cfg)
+    if hp == cfg.num_heads:
+        return out
+    rep_new = hp // cfg.num_kv_heads
+    rep_old = cfg.num_heads // cfg.num_kv_heads
+    mask = ((jnp.arange(hp) % rep_new) < rep_old).astype(out.dtype)
+    return out * mask[:, None]
+
+
+def apply_attention(cfg: ModelConfig, p: Params, x: jax.Array, *,
+                    causal: bool = True,
+                    kv_input: Optional[jax.Array] = None,
+                    positions: Optional[jax.Array] = None,
+                    window: Optional[int] = None) -> jax.Array:
+    """Full-sequence (train / prefill) attention."""
+    q, k, v = qkv_project(cfg, p, x, kv_input)
+    if cfg.use_rope and kv_input is None:
+        pos = positions if positions is not None else jnp.arange(x.shape[1])
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    w = cfg.sliding_window if window is None else window
+    if cfg.attn_seq_shard and q.shape[1] > 1:
+        # context-parallel core: q-sequence over the model axis (exact —
+        # each shard computes its rows against full K/V). Rescues archs
+        # whose head count is not divisible by the model-parallel degree.
+        from repro import sharding as shd
+        q = shd.constrain(q, "?", "attn_seq", "?", "?",
+                          rules={"attn_seq": "model"})
+    out = attention_core(q, k, v, causal=causal and kv_input is None,
+                         window=w if kv_input is None else 0)
+    out = _mask_padded_heads(cfg, out)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def decode_attention(cfg: ModelConfig, p: Params, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None,
+                     update_cache: bool = True):
+    """Single-token decode. x: (B,1,d). caches: (B,S,Hkv,D). pos: () int.
+
+    Returns (out (B,1,d), new_k_cache, new_v_cache).
+    """
+    q, k, v = qkv_project(cfg, p, x)
+    if cfg.use_rope:
+        pq = jnp.full((x.shape[1],), pos)
+        q = rope(q, pq, cfg.rope_theta)
+        k = rope(k, pq, cfg.rope_theta)
+    if update_cache:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    S = k_cache.shape[1]
+    H = q.shape[2]
+    kx = _expand_kv(k_cache, H)
+    vx = _expand_kv(v_cache, H)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kx).astype(jnp.float32) * scale
+    kpos = jnp.arange(S)
+    ok = kpos <= pos
+    w = cfg.sliding_window if window is None else window
+    if w and w > 0:
+        ok &= kpos > pos - w
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vx)
+    out = _mask_padded_heads(cfg, out)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, k_cache, v_cache

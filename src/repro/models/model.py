@@ -1,0 +1,506 @@
+"""Unified model zoo: dense | moe | ssm | hybrid | encdec | vlm.
+
+All families share one interface:
+  init_model(key, cfg)                  -> (params, logical_axes)
+  forward(cfg, params, batch, ...)      -> (logits, aux)
+  lm_loss(cfg, params, batch, ...)      -> scalar
+  init_decode_cache(cfg, batch, seq)    -> cache pytree (+ logical axes)
+  decode_step(cfg, params, cache, tok, pos) -> (logits, new_cache)
+
+Layers are stacked (leading "layers" axis) and applied with ``lax.scan`` so
+even 88-layer models lower to a small HLO (critical for the 512-device
+dry-run on a CPU host).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n: int):
+    """vmap an init fn over n layer keys -> (stacked params, logical+layers)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: fn(k)[0])(keys)
+    _, logical = fn(key)  # structure only (cheap: single-layer init)
+    logical = jax.tree.map(
+        lambda l: ("layers",) + tuple(l), logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return params, logical
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return L.pad_to_multiple(cfg.vocab_size, 256)
+
+
+# ---------------------------------------------------------------------------
+# per-family blocks
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    pa, la = L.init_attention(ks[0], cfg)
+    pm, lm = L.init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    pn1, ln1 = L.init_norm(cfg, cfg.d_model)
+    pn2, ln2 = L.init_norm(cfg, cfg.d_model)
+    return ({"attn": pa, "mlp": pm, "norm1": pn1, "norm2": pn2},
+            {"attn": la, "mlp": lm, "norm1": ln1, "norm2": ln2})
+
+
+def _apply_dense_block(cfg: ModelConfig, lp: Params, x: jax.Array,
+                       window: Optional[int] = None) -> jax.Array:
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    x = x + L.apply_attention(cfg, lp["attn"], h, causal=True, window=window)
+    h = L.apply_norm(cfg, lp["norm2"], x)
+    x = x + L.apply_mlp(cfg, lp["mlp"], h)
+    return x
+
+
+def _init_moe_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    pa, la = L.init_attention(ks[0], cfg)
+    pm, lm = M.init_moe(ks[1], cfg, cfg.d_model, cfg.d_ff)
+    pn1, ln1 = L.init_norm(cfg, cfg.d_model)
+    pn2, ln2 = L.init_norm(cfg, cfg.d_model)
+    return ({"attn": pa, "moe": pm, "norm1": pn1, "norm2": pn2},
+            {"attn": la, "moe": lm, "norm1": ln1, "norm2": ln2})
+
+
+def _apply_moe_block(cfg: ModelConfig, lp: Params, x: jax.Array,
+                     window: Optional[int] = None):
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    x = x + L.apply_attention(cfg, lp["attn"], h, causal=True, window=window)
+    h = L.apply_norm(cfg, lp["norm2"], x)
+    y, aux = M.apply_moe(cfg, lp["moe"], h)
+    return x + y, aux
+
+
+def _init_ssm_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    pm, lm = S.init_mamba(ks[0], cfg)
+    pn, ln = L.init_norm(cfg, cfg.d_model)
+    return {"mamba": pm, "norm1": pn}, {"mamba": lm, "norm1": ln}
+
+
+def _apply_ssm_block(cfg: ModelConfig, lp: Params, x: jax.Array,
+                     intra_fn=None) -> jax.Array:
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    return x + S.apply_mamba(cfg, lp["mamba"], h, intra_fn=intra_fn)
+
+
+def _init_encdec_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    psa, lsa = L.init_attention(ks[0], cfg)
+    pca, lca = L.init_attention(ks[1], cfg, cross=True)
+    pm, lm = L.init_mlp(ks[2], cfg, cfg.d_model, cfg.d_ff)
+    pn = {}
+    ln = {}
+    for i in (1, 2, 3):
+        pn[f"norm{i}"], ln[f"norm{i}"] = L.init_norm(cfg, cfg.d_model)
+    return ({"self_attn": psa, "cross_attn": pca, "mlp": pm, **pn},
+            {"self_attn": lsa, "cross_attn": lca, "mlp": lm, **ln})
+
+
+# ---------------------------------------------------------------------------
+# init_model
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 8)
+    V = padded_vocab(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Params = {
+        "tok_embed": L.dense_init(ks[0], cfg.d_model, (V, cfg.d_model), dt),
+    }
+    logical: Params = {"tok_embed": ("vocab", "embed")}
+    pn, ln = L.init_norm(cfg, cfg.d_model)
+    params["final_norm"], logical["final_norm"] = pn, ln
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            ks[1], cfg.d_model, (cfg.d_model, V), dt)
+        logical["lm_head"] = ("embed", "vocab")
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["layers"], logical["layers"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg), ks[2], cfg.num_layers)
+        if fam == "vlm":
+            params["vision_proj"] = L.dense_init(
+                ks[3], cfg.d_model, (cfg.d_model, cfg.d_model), dt)
+            logical["vision_proj"] = ("embed", "embed")
+    elif fam == "moe":
+        if cfg.moe_shared_expert:  # llama4-style: alternating dense/moe pairs
+            assert cfg.num_layers % 2 == 0
+            pd, ld = _stack_init(lambda k: _init_dense_block(k, cfg),
+                                 ks[2], cfg.num_layers // 2)
+            pm, lm = _stack_init(lambda k: _init_moe_block(k, cfg),
+                                 ks[3], cfg.num_layers // 2)
+            params["layers"] = {"dense": pd, "moe": pm}
+            logical["layers"] = {"dense": ld, "moe": lm}
+        else:  # mixtral-style: every layer MoE
+            params["layers"], logical["layers"] = _stack_init(
+                lambda k: _init_moe_block(k, cfg), ks[2], cfg.num_layers)
+    elif fam == "ssm":
+        params["layers"], logical["layers"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg), ks[2], cfg.num_layers)
+    elif fam == "hybrid":
+        assert cfg.attn_every > 0 and cfg.num_layers % cfg.attn_every == 0
+        groups = cfg.num_layers // cfg.attn_every
+
+        def group_init(k):
+            return _stack_init(lambda kk: _init_ssm_block(kk, cfg),
+                               k, cfg.attn_every)
+        gkeys = jax.random.split(ks[2], groups)
+        gp = jax.vmap(lambda k: group_init(k)[0])(gkeys)
+        _, gl = group_init(ks[2])
+        gl = jax.tree.map(
+            lambda l: ("layers",) + tuple(l), gl,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+        params["layers"], logical["layers"] = gp, gl
+        sp, sl = _init_dense_block(ks[3], cfg)  # the *shared* attention block
+        params["shared_block"], logical["shared_block"] = sp, sl
+    elif fam == "encdec":
+        penc, lenc = _stack_init(lambda k: _init_dense_block(k, cfg),
+                                 ks[2], cfg.encoder_layers)
+        pdec, ldec = _stack_init(lambda k: _init_encdec_dec_block(k, cfg),
+                                 ks[3], cfg.num_layers)
+        params["enc_layers"], logical["enc_layers"] = penc, lenc
+        params["dec_layers"], logical["dec_layers"] = pdec, ldec
+        pn2, ln2 = L.init_norm(cfg, cfg.d_model)
+        params["enc_final_norm"], logical["enc_final_norm"] = pn2, ln2
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params, logical
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    x = params["tok_embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if not cfg.use_rope:  # sinusoidal positions (whisper-style)
+        pos = _sinusoidal(jnp.arange(tokens.shape[1]), cfg.d_model)
+        x = x + pos[None].astype(x.dtype)
+    return x
+
+
+def _logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    head = (params["tok_embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return x @ head
+
+
+def _scan(body, x0, stacked, remat: bool):
+    from repro.flags import analysis_mode
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, lp):
+        return fn(carry, lp)
+    if analysis_mode():  # unroll layers so cost_analysis counts every layer
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        return jax.lax.scan(step, x0, stacked, unroll=n)
+    return jax.lax.scan(step, x0, stacked)
+
+
+def _dscan(body, x0, xs):
+    """Layer scan for decode paths; unrolled under analysis mode."""
+    from repro.flags import analysis_mode
+    if analysis_mode():
+        n = jax.tree.leaves(xs)[0].shape[0]
+        return jax.lax.scan(body, x0, xs, unroll=n)
+    return jax.lax.scan(body, x0, xs)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, remat: bool = False, intra_fn=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits, aux_loss). batch keys per family (see configs)."""
+    fam = cfg.family
+    dt = jnp.dtype(cfg.dtype)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if fam == "encdec":
+        enc = batch["frames"].astype(dt)  # stub frontend embeddings
+        pos = _sinusoidal(jnp.arange(enc.shape[1]), cfg.d_model)
+        enc = enc + pos[None].astype(dt)
+
+        def enc_body(x, lp):
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            x = x + L.apply_attention(cfg, lp["attn"], h, causal=False)
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            x = x + L.apply_mlp(cfg, lp["mlp"], h)
+            return x, None
+        enc, _ = _scan(enc_body, enc, params["enc_layers"], remat)
+        enc = L.apply_norm(cfg, params["enc_final_norm"], enc)
+
+        x = _embed(cfg, params, batch["tokens"])
+
+        def dec_body(x, lp):
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            x = x + L.apply_attention(cfg, lp["self_attn"], h, causal=True)
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            x = x + L.apply_attention(cfg, lp["cross_attn"], h,
+                                      kv_input=enc)
+            h = L.apply_norm(cfg, lp["norm3"], x)
+            x = x + L.apply_mlp(cfg, lp["mlp"], h)
+            return x, None
+        x, _ = _scan(dec_body, x, params["dec_layers"], remat)
+        return _logits(cfg, params, x), aux0
+
+    if fam == "vlm":
+        tok = _embed(cfg, params, batch["tokens"])
+        patches = batch["patch_embeds"].astype(dt) @ params["vision_proj"]
+        x = jnp.concatenate([patches, tok], axis=1)
+    else:
+        x = _embed(cfg, params, batch["tokens"])
+
+    if fam in ("dense", "vlm"):
+        def body(x, lp):
+            return _apply_dense_block(cfg, lp, x), None
+        x, _ = _scan(body, x, params["layers"], remat)
+    elif fam == "moe":
+        if cfg.moe_shared_expert:  # llama4: (dense SWA, moe full) pairs
+            def body(carry, lp):
+                x, aux = carry
+                x = _apply_dense_block(cfg, lp["dense"], x,
+                                       window=cfg.sliding_window)
+                x, a = _apply_moe_block(cfg, lp["moe"], x, window=0)
+                return (x, aux + a), None
+            (x, aux0), _ = _scan(body, (x, aux0), params["layers"], remat)
+        else:
+            def body(carry, lp):
+                x, aux = carry
+                x, a = _apply_moe_block(cfg, lp, x)
+                return (x, aux + a), None
+            (x, aux0), _ = _scan(body, (x, aux0), params["layers"], remat)
+    elif fam == "ssm":
+        def body(x, lp):
+            return _apply_ssm_block(cfg, lp, x, intra_fn=intra_fn), None
+        x, _ = _scan(body, x, params["layers"], remat)
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+
+        def group_body(x, gp):
+            def inner(x2, lp):
+                return _apply_ssm_block(cfg, lp, x2, intra_fn=intra_fn), None
+            x, _ = _dscan(inner, x, gp)
+            x = _apply_dense_block(cfg, shared, x)
+            return x, None
+        x, _ = _scan(group_body, x, params["layers"], remat)
+    else:
+        raise ValueError(fam)
+    return _logits(cfg, params, x), aux0
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            *, remat: bool = False, aux_weight: float = 0.01) -> jax.Array:
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # loss only on the text positions
+        logits = logits[:, -labels.shape[1]:]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq: int,
+                      dtype=None) -> Tuple[Params, Params]:
+    """Returns (cache, logical_axes). ``seq`` is the max/present KV length."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    fam = cfg.family
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv_logical = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+
+    def kv(nl):
+        return jnp.zeros((nl, batch, seq, hk, hd), dt)
+
+    if fam in ("dense", "vlm"):
+        c = {"k": kv(cfg.num_layers), "v": kv(cfg.num_layers)}
+        l = {"k": kv_logical, "v": kv_logical}
+    elif fam == "moe":
+        if cfg.moe_shared_expert:
+            half = cfg.num_layers // 2
+            c = {"k": jnp.zeros((half, 2, batch, seq, hk, hd), dt),
+                 "v": jnp.zeros((half, 2, batch, seq, hk, hd), dt)}
+            l6 = ("layers", None, "batch", "kv_seq", "kv_heads", "head_dim")
+            l = {"k": l6, "v": l6}
+        else:
+            c = {"k": kv(cfg.num_layers), "v": kv(cfg.num_layers)}
+            l = {"k": kv_logical, "v": kv_logical}
+    elif fam == "ssm":
+        c = S.init_mamba_cache(cfg, cfg.num_layers, batch, dt)
+        l = {"ssm_state": ("layers", "batch", "ssm_heads", None, "state"),
+             "conv_state": ("layers", "batch", None, None)}
+    elif fam == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        mc = S.init_mamba_cache(cfg, groups * cfg.attn_every, batch, dt)
+        mc = {k: v.reshape((groups, cfg.attn_every) + v.shape[1:])
+              for k, v in mc.items()}
+        c = {**mc,
+             "k": jnp.zeros((groups, batch, seq, hk, hd), dt),
+             "v": jnp.zeros((groups, batch, seq, hk, hd), dt)}
+        l = {"ssm_state": ("layers", None, "batch", "ssm_heads", None,
+                           "state"),
+             "conv_state": ("layers", None, "batch", None, None),
+             "k": kv_logical, "v": kv_logical}
+    elif fam == "encdec":
+        c = {"k": kv(cfg.num_layers), "v": kv(cfg.num_layers),
+             "xk": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                              cfg.num_heads, hd), dt),
+             "xv": jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq,
+                              cfg.num_heads, hd), dt)}
+        xl = ("layers", "batch", None, "heads", "head_dim")
+        l = {"k": kv_logical, "v": kv_logical, "xk": xl, "xv": xl}
+    else:
+        raise ValueError(fam)
+    return c, l
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step. tokens: (B,1) int32, pos: () int32 (current length).
+
+    Returns (logits (B,1,V), new_cache)."""
+    fam = cfg.family
+    x = params["tok_embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if not cfg.use_rope:
+        x = x + _sinusoidal(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+    if fam in ("dense", "vlm"):
+        def body(x, sl):
+            lp, kc, vc = sl
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            a, kc, vc = L.decode_attention(cfg, lp["attn"], h, kc, vc, pos)
+            x = x + a
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            x = x + L.apply_mlp(cfg, lp["mlp"], h)
+            return x, (kc, vc)
+        x, (nk, nv) = _dscan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": nk, "v": nv}
+    elif fam == "moe":
+        if cfg.moe_shared_expert:
+            def body(x, sl):
+                lp, kc, vc = sl
+                h = L.apply_norm(cfg, lp["dense"]["norm1"], x)
+                a, k0, v0 = L.decode_attention(
+                    cfg, lp["dense"]["attn"], h, kc[0], vc[0], pos,
+                    window=cfg.sliding_window)
+                x = x + a
+                h = L.apply_norm(cfg, lp["dense"]["norm2"], x)
+                x = x + L.apply_mlp(cfg, lp["dense"]["mlp"], h)
+                h = L.apply_norm(cfg, lp["moe"]["norm1"], x)
+                a, k1, v1 = L.decode_attention(
+                    cfg, lp["moe"]["attn"], h, kc[1], vc[1], pos, window=0)
+                x = x + a
+                h = L.apply_norm(cfg, lp["moe"]["norm2"], x)
+                y, _ = M.apply_moe(cfg, lp["moe"]["moe"], h)
+                x = x + y
+                return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+            x, (nk, nv) = jax.lax.scan(
+                body, x, ({"dense": params["layers"]["dense"],
+                           "moe": params["layers"]["moe"]},
+                          cache["k"], cache["v"]))
+        else:
+            def body(x, sl):
+                lp, kc, vc = sl
+                h = L.apply_norm(cfg, lp["norm1"], x)
+                a, kc, vc = L.decode_attention(cfg, lp["attn"], h, kc, vc,
+                                               pos)
+                x = x + a
+                h = L.apply_norm(cfg, lp["norm2"], x)
+                y, _ = M.apply_moe(cfg, lp["moe"], h)
+                x = x + y
+                return x, (kc, vc)
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": nk, "v": nv}
+    elif fam == "ssm":
+        def body(x, sl):
+            lp, st, cs = sl
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            y, st, cs = S.decode_mamba(cfg, lp["mamba"], h, st, cs)
+            return x + y, (st, cs)
+        x, (ns, nc) = _dscan(
+            body, x, (params["layers"], cache["ssm_state"],
+                      cache["conv_state"]))
+        cache = {"ssm_state": ns, "conv_state": nc}
+    elif fam == "hybrid":
+        shared = params["shared_block"]
+
+        def body(x, sl):
+            gp, st, cs, kc, vc = sl
+
+            def inner(x2, isl):
+                lp, st1, cs1 = isl
+                h = L.apply_norm(cfg, lp["norm1"], x2)
+                y, st1, cs1 = S.decode_mamba(cfg, lp["mamba"], h, st1, cs1)
+                return x2 + y, (st1, cs1)
+            x, (st, cs) = _dscan(inner, x, (gp, st, cs))
+            h = L.apply_norm(cfg, shared["norm1"], x)
+            a, kc, vc = L.decode_attention(cfg, shared["attn"], h, kc, vc,
+                                           pos)
+            x = x + a
+            h = L.apply_norm(cfg, shared["norm2"], x)
+            x = x + L.apply_mlp(cfg, shared["mlp"], h)
+            return x, (st, cs, kc, vc)
+        x, (ns, nc, nk, nv) = _dscan(
+            body, x, (params["layers"], cache["ssm_state"],
+                      cache["conv_state"], cache["k"], cache["v"]))
+        cache = {"ssm_state": ns, "conv_state": nc, "k": nk, "v": nv}
+    elif fam == "encdec":
+        def body(x, sl):
+            lp, kc, vc, xk, xv = sl
+            h = L.apply_norm(cfg, lp["norm1"], x)
+            a, kc, vc = L.decode_attention(cfg, lp["self_attn"], h, kc, vc,
+                                           pos)
+            x = x + a
+            h = L.apply_norm(cfg, lp["norm2"], x)
+            a, _, _ = L.decode_attention(cfg, lp["cross_attn"], h, xk, xv,
+                                         xk.shape[1] - 1, update_cache=False)
+            x = x + a
+            h = L.apply_norm(cfg, lp["norm3"], x)
+            x = x + L.apply_mlp(cfg, lp["mlp"], h)
+            return x, (kc, vc)
+        x, (nk, nv) = _dscan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        raise ValueError(fam)
+    return _logits(cfg, params, x), cache

@@ -1,0 +1,197 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Memory-safe dispatch (never materializes the (tokens, experts, capacity)
+one-hot): assignments are argsorted by expert id, position-in-expert is
+computed from the sorted order, and tokens are scattered into a per-expert
+capacity buffer. Experts shard over the ``model`` mesh axis when divisible
+(llama4: 128 experts / 16 = 8 per chip), otherwise the expert FFN dim does
+(mixtral: 8 experts, d_ff sharded).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, d: int, ff: int) -> Tuple[Params, Params]:
+    E = cfg.num_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], d, (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], d, (E, d, ff), dt),
+        "w_up": dense_init(ks[2], d, (E, d, ff), dt),
+        "w_out": dense_init(ks[3], ff, (E, ff, d), dt),
+    }
+    l: Params = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", "ff"),
+        "w_up": ("experts", "embed", "ff"),
+        "w_out": ("experts", "ff", "embed"),
+    }
+    if cfg.moe_shared_expert:
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], d, (d, ff), dt),
+            "w_up": dense_init(ks2[1], d, (d, ff), dt),
+            "w_out": dense_init(ks2[2], ff, (ff, d), dt),
+        }
+        l["shared"] = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                       "w_out": ("ff", "embed")}
+    return p, l
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    E, k = cfg.num_experts, cfg.experts_per_token
+    cap = int(tokens * k * cfg.capacity_factor / E) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to 8
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (y (B,S,d), aux_load_balance_loss ())."""
+    B, S, d = x.shape
+    if cfg.moe_local_dispatch:
+        # per-batch-row dispatch: capacity buffers stay sharded with the
+        # batch, so no cross-shard all-reduce of the (E,cap,d) buffer
+        y, aux = _moe_tokens_batched(cfg, p, x)
+        y = y + _shared(cfg, p, x)
+        return y, jnp.mean(aux)
+    y, aux = _moe_tokens(cfg, p, x.reshape(B * S, d))
+    y = y.reshape(B, S, d) + _shared(cfg, p, x)
+    return y, aux
+
+
+def _shared(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if not cfg.moe_shared_expert:
+        return jnp.zeros((), x.dtype)
+    sp = p["shared"]
+    hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+    return hs @ sp["w_out"]
+
+
+def _moe_tokens_batched(cfg: ModelConfig, p: Params, x: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Batch-local dispatch: x (B,S,d) -> (y (B,S,d), aux (B,)).
+
+    The capacity buffer carries the batch dim and is constrained to stay
+    sharded with it ("data"), so dispatch/combine never cross shards."""
+    from repro import sharding as shd
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = (x @ p["router"]).astype(jnp.float32)          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)         # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=1)                                 # (B,E)
+    ce = jnp.zeros((B, E), jnp.float32).at[
+        jnp.arange(B)[:, None], expert_ids.reshape(B, -1)].add(
+        1.0 / (S * k))
+    aux = E * jnp.sum(me * ce, axis=-1)                     # (B,)
+
+    A = S * k
+    flat_e = expert_ids.reshape(B, A)
+    flat_g = gate_vals.reshape(B, A)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), k)[None], (B, A))
+    order = jnp.argsort(flat_e, axis=1)
+    rows = jnp.arange(B)[:, None]
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=1)
+    counts = jnp.zeros((B, E), jnp.int32).at[rows, e_sorted].add(1)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32), jnp.cumsum(counts, 1)[:, :-1]], 1)
+    pos_in_e = jnp.arange(A, dtype=jnp.int32)[None] - \
+        jnp.take_along_axis(seg_start, e_sorted, axis=1)
+    cap = _capacity(S, cfg)
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+
+    # scatter only the small int32 slot map; move the big tensors with
+    # gathers (take_along_axis), which stay local to the batch shard —
+    # scatter-adds on batch-sharded activations otherwise lower to a full
+    # cross-shard gather of the (B, S*k, d) combine buffer.
+    slot_tok = jnp.full((B, E * cap + 1), S, jnp.int32)  # S = sentinel
+    slot_tok = slot_tok.at[rows, dest].set(
+        jnp.where(keep, tok_sorted, S))
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad, slot_tok[:, :-1, None], axis=1).reshape(B, E, cap, d)
+    xe = shd.constrain(xe, "batch", None, None, None)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) * \
+        jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    ye = jnp.einsum("becf,efd->becd", h, p["w_out"])
+    ye = shd.constrain(ye, "batch", None, None, None)
+
+    got = ye.reshape(B, E * cap, d)
+    got = jnp.concatenate([got, jnp.zeros((B, 1, d), got.dtype)], axis=1)
+    per_assign = jnp.take_along_axis(got, dest[..., None], axis=1) * \
+        jnp.take_along_axis(flat_g, order, axis=1)[..., None].astype(x.dtype)
+    # un-sort with a gather (inverse permutation), then sum k contributions
+    inv_order = jnp.argsort(order, axis=1)
+    per_tok = jnp.take_along_axis(per_assign, inv_order[..., None], axis=1)
+    y = per_tok.reshape(B, S, k, d).sum(axis=2)
+    return y, aux
+
+
+def _moe_tokens(cfg: ModelConfig, p: Params, xt: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """xt: (T,d) -> (y (T,d), aux ())."""
+    T, d = xt.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)         # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                                 # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (T * k))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    A = T * k
+    flat_e = expert_ids.reshape(A)                          # (A,)
+    flat_g = gate_vals.reshape(A)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e)                             # stable
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    # position within expert = index - start-of-segment
+    counts = jnp.zeros((E,), jnp.int32).at[e_sorted].add(1)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(A, dtype=jnp.int32) - seg_start[e_sorted]
+    cap = _capacity(T, cfg)
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)  # overflow slot
+
+    buf = jnp.zeros((E * cap + 1, d), xt.dtype)
+    buf = buf.at[dest].set(xt[tok_sorted] * keep[:, None].astype(xt.dtype))
+    xe = buf[:-1].reshape(E, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])          # (E,cap,d)
+
+    # ---- combine ----
+    got = ye.reshape(E * cap, d)
+    got = jnp.concatenate([got, jnp.zeros((1, d), got.dtype)])
+    per_assign = got[dest] * flat_g[order][:, None].astype(xt.dtype)
+    # un-sort and sum the k contributions per token
+    y = jnp.zeros((T, d), xt.dtype).at[tok_sorted].add(per_assign)
+    return y, aux

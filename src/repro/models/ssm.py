@@ -1,0 +1,211 @@
+"""Mamba-2 (SSD, state-space duality) block in pure JAX. [arXiv:2405.21060]
+
+Chunked dual form: intra-chunk quadratic attention-like block (the part the
+Pallas kernel ``repro.kernels.ssd_scan`` accelerates) + inter-chunk linear
+state recurrence via ``lax.scan``. Single B/C group shared across heads
+(ngroups=1), per-head scalar A, depthwise causal conv on (x, B, C).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    inner = cfg.ssm_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    cw = cfg.ssm_conv_width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    conv_ch = inner + 2 * N
+    p: Params = {
+        "wz": dense_init(ks[0], d, (d, inner), dt),
+        "wx": dense_init(ks[1], d, (d, inner), dt),
+        "wB": dense_init(ks[2], d, (d, N), dt),
+        "wC": dense_init(ks[3], d, (d, N), dt),
+        "wdt": dense_init(ks[4], d, (d, H), dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_w": dense_init(ks[5], cw, (cw, conv_ch), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "norm_scale": jnp.ones((inner,), dt),
+        "wo": dense_init(ks[6], inner, (inner, d), dt),
+    }
+    l: Params = {
+        "wz": ("embed", "ssm_inner"),
+        "wx": ("embed", "ssm_inner"),
+        "wB": ("embed", "state"),
+        "wC": ("embed", "state"),
+        "wdt": ("embed", "ssm_heads"),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "norm_scale": ("ssm_inner",),
+        "wo": ("ssm_inner", "embed"),
+    }
+    return p, l
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)
+    where state holds the last K-1 inputs for streaming decode."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., C). Returns (..., C, C) with out[i,j] = sum_{j<l<=i} a_l,
+    -inf above the diagonal."""
+    C = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((C, C), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dtv: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int, initial_state=None,
+                intra_fn=None):
+    """SSD over a full sequence.
+
+    x: (B,S,H,P)  dtv: (B,S,H)  A: (H,) negative  Bm/Cm: (B,S,N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    ``intra_fn`` optionally overrides the intra-chunk computation (the Pallas
+    kernel hook); signature (xc, ac, Bc, Cc, dtc) -> y_intra per chunk batch.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    K = x.shape[1] // chunk
+    xc = x.reshape(Bsz, K, chunk, H, P)
+    dtc = dtv.reshape(Bsz, K, chunk, H)
+    Bc = Bm.reshape(Bsz, K, chunk, N)
+    Cc = Cm.reshape(Bsz, K, chunk, N)
+    a = dtc * A  # (B,K,C,H) negative decay logits
+    a_t = a.transpose(0, 1, 3, 2)  # (B,K,H,C)
+    seg = _segsum(a_t)  # (B,K,H,C,C)
+    cum = jnp.cumsum(a_t, axis=-1)  # (B,K,H,C)
+    total = cum[..., -1]  # (B,K,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    if intra_fn is None:
+        scores = jnp.einsum("bkin,bkjn->bkij", Cc.astype(jnp.float32),
+                            Bc.astype(jnp.float32))
+        att = scores[:, :, None] * jnp.exp(seg)  # (B,K,H,C,C)
+        y_intra = jnp.einsum("bkhij,bkjh,bkjhp->bkihp", att, dtc,
+                             xc.astype(jnp.float32))
+    else:
+        y_intra = intra_fn(xc, a_t, Bc, Cc, dtc)
+
+    # ---- chunk-final states ----
+    decay_to_end = jnp.exp(total[..., None] - cum)  # (B,K,H,C)
+    states = jnp.einsum("bkjn,bkhj,bkjh,bkjhp->bkhpn",
+                        Bc.astype(jnp.float32), decay_to_end, dtc,
+                        xc.astype(jnp.float32))  # (B,K,H,P,N)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(total)  # (B,K,H)
+
+    def step(s, inp):
+        st_k, dec_k = inp  # (B,H,P,N), (B,H)
+        s_new = s * dec_k[..., None, None] + st_k
+        return s_new, s  # emit state *entering* the chunk
+
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,K,H,P,N)
+
+    y_inter = jnp.einsum("bkin,bkhi,bkhpn->bkihp", Cc.astype(jnp.float32),
+                         jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, K * chunk, H, P)
+    return y[:, :S].astype(x.dtype), final_state
+
+
+def apply_mamba(cfg: ModelConfig, p: Params, u: jax.Array,
+                intra_fn=None) -> jax.Array:
+    """Full-sequence Mamba-2 block. u: (B,S,d) -> (B,S,d)."""
+    B_, S, _ = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = u @ p["wz"]
+    xBC = jnp.concatenate([u @ p["wx"], u @ p["wB"], u @ p["wC"]], axis=-1)
+    xBC, _ = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    inner = cfg.ssm_inner
+    x, Bm, Cm = jnp.split(xBC, [inner, inner + N], axis=-1)
+    x = x.reshape(B_, S, H, P)
+    dtv = jax.nn.softplus((u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(x, dtv, A, Bm, Cm, cfg.ssm_chunk, intra_fn=intra_fn)
+    y = y + (p["D"][:, None] * x.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S, inner)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-5)).astype(u.dtype)
+    y = y * p["norm_scale"]
+    return y @ p["wo"]
+
+
+def init_mamba_cache(cfg: ModelConfig, num_layers: int, batch: int,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.ssm_inner + 2 * N
+    return {
+        "ssm_state": jnp.zeros((num_layers, batch, H, P, N), jnp.float32),
+        "conv_state": jnp.zeros(
+            (num_layers, batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def decode_mamba(cfg: ModelConfig, p: Params, u: jax.Array,
+                 ssm_state: jax.Array, conv_state: jax.Array):
+    """Single-token recurrent update. u: (B,1,d). ssm_state: (B,H,P,N)."""
+    B_, _, _ = u.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = cfg.ssm_inner
+    z = u @ p["wz"]
+    xBC = jnp.concatenate([u @ p["wx"], u @ p["wB"], u @ p["wC"]], axis=-1)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    x, Bm, Cm = jnp.split(xBC[:, 0], [inner, inner + N], axis=-1)
+    x = x.reshape(B_, H, P).astype(jnp.float32)
+    dtv = jax.nn.softplus(
+        (u[:, 0] @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A)  # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", Bm.astype(jnp.float32), dtv, x)
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), ssm_state)
+    y = y + p["D"][:, None] * x
+    y = y.reshape(B_, 1, inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-5)).astype(u.dtype)
+    y = y * p["norm_scale"]
+    return y @ p["wo"], ssm_state, conv_state

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    make_optimizer,
+    sgd,
+    adamw,
+    make_lr_schedule,
+)

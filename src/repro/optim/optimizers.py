@@ -1,0 +1,104 @@
+"""Minimal pure-JAX optimizers (no optax dependency).
+
+Each optimizer is (init_fn, update_fn):
+  init_fn(params)                         -> opt_state
+  update_fn(grads, opt_state, params, lr) -> (updates, new_opt_state)
+Updates are *subtracted* from params by the caller. All ops are leafwise, so
+they compose with vmap over the federated replica axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: lr * g, grads), state
+        mu = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32),
+            state["mu"], grads)
+        upd = jax.tree.map(lambda v: lr * v, mu)
+        return upd, {"mu": mu}
+
+    return init, update
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd_leaf(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return lr * u
+        upd = jax.tree.map(upd_leaf, m, v, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return init, update
+
+
+def make_optimizer(cfg: TrainConfig):
+    if cfg.optimizer == "sgd":
+        return sgd(cfg.momentum, cfg.weight_decay)
+    if cfg.optimizer == "adamw":
+        return adamw(weight_decay=cfg.weight_decay)
+    raise ValueError(cfg.optimizer)
+
+
+def make_lr_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    base = cfg.learning_rate
+
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        if cfg.lr_schedule == "constant":
+            return jnp.asarray(base, jnp.float32)
+        warm = max(cfg.warmup_steps, 1)
+        wfrac = jnp.minimum(step / warm, 1.0)
+        if cfg.lr_schedule == "warmup_cosine":
+            prog = jnp.clip((step - warm) / max(cfg.total_steps - warm, 1),
+                            0.0, 1.0)
+            cos = 0.5 * (1 + jnp.cos(math.pi * prog))
+            return base * wfrac * cos
+        if cfg.lr_schedule == "cosine":
+            prog = jnp.clip(step / max(cfg.total_steps, 1), 0.0, 1.0)
+            return base * 0.5 * (1 + jnp.cos(math.pi * prog))
+        raise ValueError(cfg.lr_schedule)
+
+    return schedule
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p - u.astype(p.dtype)), params, updates)

@@ -1,0 +1,131 @@
+"""Logical-axis sharding: map named parameter/activation axes to mesh axes.
+
+Models annotate every array dimension with a *logical* name ("heads", "ff",
+"vocab", ...). At launch time :func:`resolve_specs` turns those names into
+``PartitionSpec``s for a concrete mesh, falling back to replication whenever
+the dimension size is not divisible by the mesh axis (e.g. 40 heads on a
+16-way model axis) so that every assigned architecture lowers on the fixed
+production mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical axis -> preferred mesh axis. ``None`` = always replicated.
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    # parameter axes
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "patch": None,
+    # activation axes
+    "batch": "data",
+    "seq": None,
+    "kv_seq": None,
+    "replica": "replica",  # rewritten to the concrete replica axes at launch
+}
+
+
+def replica_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry federated device replicas (pod+data if present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _resolve_one(
+    shape: Tuple[int, ...],
+    logical: Tuple[Optional[str], ...],
+    mesh: Mesh,
+    rules: Dict[str, Optional[str]],
+) -> P:
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for size, name in zip(shape, logical):
+        if name == "?":
+            out.append(P.UNCONSTRAINED)
+            continue
+        axis = rules.get(name) if name else None
+        if axis == "replica":
+            raxes = replica_axes(mesh)
+            rsize = int(np.prod([mesh.shape[a] for a in raxes]))
+            if raxes and size % rsize == 0 and not (set(raxes) & used):
+                out.append(tuple(raxes) if len(raxes) > 1 else raxes[0])
+                used.update(raxes)
+            else:
+                out.append(None)
+            continue
+        if (
+            axis is not None
+            and axis in mesh.axis_names
+            and axis not in used
+            and size % mesh.shape[axis] == 0
+        ):
+            out.append(axis)
+            used.add(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def resolve_specs(shapes: Any, logicals: Any, mesh: Mesh,
+                  rules: Optional[Dict[str, Optional[str]]] = None) -> Any:
+    """Map a pytree of ShapeDtypeStructs + a matching pytree of logical-axis
+    tuples to a pytree of PartitionSpecs."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    return jax.tree.map(
+        lambda s, l: _resolve_one(tuple(s.shape), tuple(l), mesh, rules),
+        shapes,
+        logicals,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def prepend_axis(logicals: Any, name: str) -> Any:
+    """Prepend a logical axis (e.g. the FL replica axis) to every leaf."""
+    return jax.tree.map(
+        lambda l: (name,) + tuple(l),
+        logicals,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constrain(x: jax.Array, *logical: Optional[str],
+              rules: Optional[Dict[str, Optional[str]]] = None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a mesh."""
+    mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    spec = _resolve_one(tuple(x.shape), tuple(logical), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        env = jax._src.mesh.thread_resources.env  # type: ignore[attr-defined]
+        m = env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: deliberately NOT forcing a multi-device host here — unit/smoke tests
+# run on the single real CPU device. Multi-device trainer tests spawn
+# subprocesses with XLA_FLAGS set (see test_sharded.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

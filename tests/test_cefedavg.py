@@ -1,0 +1,115 @@
+"""CE-FedAvg operator algebra + special-case equivalences (paper §4.3)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import topology as topo
+from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+
+def _sim(fl, *, seed=0, lr=0.1, d=16, classes=4, n_samples=800):
+    x, y = make_synthetic_classification(n_samples, d, classes, seed=3)
+    tx, ty = make_synthetic_classification(400, d, classes, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, d, 32, classes),
+        apply_mlp_classifier, fl, data, lr=lr, batch_size=16, seed=seed)
+
+
+def _params_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+def test_w_schedule_doubly_stochastic():
+    for algo in ("ce_fedavg", "hier_favg", "fedavg", "local_edge"):
+        fl = FLConfig(algorithm=algo, num_clusters=4, devices_per_cluster=2,
+                      topology="ring")
+        s = make_w_schedule(fl)
+        for W in (s.W_intra, s.W_inter):
+            np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-9)
+            np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9)
+
+
+def test_mix_preserves_average():
+    """Eq. (12): the device-average is invariant under every W_t."""
+    fl = FLConfig(num_clusters=4, devices_per_cluster=2, topology="ring",
+                  pi=3)
+    s = make_w_schedule(fl)
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 5, 3))}
+    for W in (s.W_intra, s.W_inter):
+        mixed = mix(W, params)
+        np.testing.assert_allclose(np.asarray(mixed["w"].mean(0)),
+                                   np.asarray(params["w"].mean(0)),
+                                   atol=1e-5)
+
+
+def test_ce_reduces_to_fedavg():
+    """m=1, q=1: CE-FedAvg == cloud FedAvg exactly (same seeds)."""
+    fl_ce = FLConfig(algorithm="ce_fedavg", num_clusters=1,
+                     devices_per_cluster=8, tau=2, q=1, pi=1,
+                     topology="ring")
+    fl_fa = dataclasses.replace(fl_ce, algorithm="fedavg")
+    s1, s2 = _sim(fl_ce), _sim(fl_fa)
+    s1.run(2)
+    s2.run(2)
+    _params_close(s1.params, s2.params)
+
+
+def test_ce_complete_graph_reduces_to_hier_favg():
+    """Complete backhaul: H = A_m so one gossip step == cloud averaging."""
+    fl_ce = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                     devices_per_cluster=2, tau=1, q=2, pi=1,
+                     topology="complete")
+    fl_h = dataclasses.replace(fl_ce, algorithm="hier_favg")
+    s1, s2 = _sim(fl_ce), _sim(fl_h)
+    s1.run(2)
+    s2.run(2)
+    _params_close(s1.params, s2.params)
+
+
+def test_dec_local_sgd_special_case():
+    fl = FLConfig(algorithm="dec_local_sgd", num_clusters=8,
+                  devices_per_cluster=1, tau=1, q=4, pi=1, topology="ring")
+    s = _sim(fl)
+    hist = s.run(2)
+    assert np.isfinite(hist["loss"][-1])
+
+
+def test_local_edge_never_mixes_across_clusters():
+    fl = FLConfig(algorithm="local_edge", num_clusters=4,
+                  devices_per_cluster=2, tau=1, q=2, topology="ring")
+    s = make_w_schedule(fl)
+    # W_inter block-diagonal: no mass crosses cluster boundaries
+    W = s.W_inter
+    assert W[0, 2] == 0 and W[0, 7] == 0 and W[0, 1] > 0
+
+
+def test_simulator_learns():
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4, topology="ring")
+    s = _sim(fl, lr=0.1)
+    acc0, _ = s.evaluate()
+    hist = s.run(8)
+    assert hist["acc"][-1] > max(acc0 + 0.15, 0.5), (acc0, hist["acc"])
+
+
+def test_edge_models_equal_within_cluster_after_round():
+    """After any aggregation boundary, devices in a cluster share the edge
+    model (Algorithm 1 line 12)."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=1, q=1, pi=2, topology="ring")
+    s = _sim(fl)
+    s.run(1)
+    w = np.asarray(jax.tree.leaves(s.params)[0])
+    for c in range(4):
+        np.testing.assert_allclose(w[2 * c], w[2 * c + 1], atol=1e-6)

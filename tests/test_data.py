@@ -1,0 +1,85 @@
+"""Federated partitioner invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.federated import (build_fl_data, cluster_partition,
+                                  dirichlet_partition,
+                                  make_synthetic_classification,
+                                  shard_by_label)
+from repro.data.lm import TokenStream, synthetic_lm_batch
+
+
+@given(st.integers(2, 16), st.floats(0.1, 10.0), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_dirichlet_partition_is_a_partition(n_dev, alpha, seed):
+    _, y = make_synthetic_classification(500, 4, 7, seed=seed)
+    parts = dirichlet_partition(y, n_dev, alpha, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(y)
+    assert len(np.unique(allidx)) == len(y)  # disjoint union
+
+
+def test_dirichlet_alpha_controls_skew():
+    _, y = make_synthetic_classification(4000, 4, 10, seed=0)
+
+    def skew(alpha):
+        parts = dirichlet_partition(y, 8, alpha, seed=1)
+        props = []
+        for p in parts:
+            c = np.bincount(y[p], minlength=10) / max(len(p), 1)
+            props.append(c)
+        return np.std(np.stack(props), axis=0).mean()
+    assert skew(0.1) > skew(100.0)  # small alpha -> more heterogeneity
+
+
+@given(st.integers(2, 8), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_cluster_partition_covers_everything(m, dpc):
+    _, y = make_synthetic_classification(800, 4, 10, seed=2)
+    for iid in (True, False):
+        parts = cluster_partition(y, m, dpc, cluster_iid=iid, seed=3)
+        assert len(parts) == m * dpc
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == len(y)
+
+
+def test_cluster_noniid_reduces_labels_per_cluster():
+    _, y = make_synthetic_classification(4000, 4, 10, seed=4)
+    parts = cluster_partition(y, 8, 2, cluster_iid=False,
+                              labels_per_cluster=2, seed=5)
+    for c in range(8):
+        cl = np.concatenate(parts[2 * c:2 * c + 2])
+        labels = np.unique(y[cl])
+        assert len(labels) <= 4  # ~C=2 labels (boundary shards add a few)
+
+
+def test_shard_by_label_pathological():
+    _, y = make_synthetic_classification(1000, 4, 10, seed=6)
+    parts = shard_by_label(y, 10, shards_per_device=2, seed=7)
+    n_labels = [len(np.unique(y[p])) for p in parts]
+    assert np.mean(n_labels) <= 4
+
+
+def test_build_fl_data_stacks_equal_shapes():
+    x, y = make_synthetic_classification(300, 6, 4, seed=8)
+    parts = dirichlet_partition(y, 6, 0.5, 9)
+    data = build_fl_data(x, y, parts, x[:50], y[:50],
+                         samples_per_device=32)
+    assert data["xs"].shape == (6, 32, 6)
+    assert data["ys"].shape == (6, 32)
+
+
+def test_token_stream_cluster_skew():
+    ts = TokenStream(1000, 8, lambda r: r // 2, seed=0)
+    b = ts.next_batch((4, 16))
+    assert b["tokens"].shape == (8, 4, 16)
+    assert b["tokens"].max() < 1000
+    # same-cluster replicas share distributional shift; labels = next token
+    np.testing.assert_array_equal(b["labels"][:, :, :-1],
+                                  b["tokens"][:, :, 1:])
+
+
+def test_synthetic_lm_batch_labels_shifted():
+    b = synthetic_lm_batch((2, 8), 100, seed=1)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])

@@ -1,0 +1,146 @@
+"""Per-arch smoke tests (deliverable f): REDUCED variant of each family runs
+one forward + one train step on CPU; asserts shapes + no NaNs. Also decode
+correctness: incremental decode matches full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_model_config
+from repro.data.lm import synthetic_lm_batch
+from repro.models import model as mdl
+from repro.models.model import padded_vocab
+
+
+def _reduced_batch(cfg, B=2, S=64, seed=0):
+    batch = {k: jnp.asarray(v) for k, v in
+             synthetic_lm_batch((B, S), cfg.vocab_size, seed=seed).items()}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(1), (B, cfg.encoder_seq, cfg.d_model)) * 0.02
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(1), (B, cfg.num_patches, cfg.d_model)) * 0.02
+        batch["tokens"] = batch["tokens"][:, :S - cfg.num_patches]
+        batch["labels"] = batch["labels"][:, :S - cfg.num_patches]
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = get_model_config(arch).reduced()
+    assert cfg.num_layers <= 2 or cfg.family == "hybrid"
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    params, logical = mdl.init_model(jax.random.PRNGKey(0), cfg)
+    # every param leaf has a matching logical annotation
+    for leaf, log in zip(
+            jax.tree.leaves(params),
+            jax.tree.leaves(logical, is_leaf=lambda x: isinstance(x, tuple))):
+        assert leaf.ndim == len(log), (leaf.shape, log)
+    batch = _reduced_batch(cfg)
+    logits, aux = jax.jit(lambda p, b: mdl.forward(cfg, p, b))(params, batch)
+    S_out = batch["tokens"].shape[1] + (
+        cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_out, padded_vocab(cfg))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step_improves_and_finite(arch):
+    cfg = get_model_config(arch).reduced()
+    params, _ = mdl.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _reduced_batch(cfg)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(
+            lambda q: mdl.lm_loss(cfg, q, batch))(p)
+        p = jax.tree.map(lambda a, b: a - 0.1 * b.astype(a.dtype), p, g)
+        return loss, p
+
+    l0, params = step(params)
+    l1, params = step(params)
+    l2, _ = step(params)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l2))
+    assert float(l2) < float(l0), (float(l0), float(l2))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-2.7b",
+                                  "mixtral-8x7b", "whisper-medium",
+                                  "zamba2-2.7b", "qwen2.5-14b",
+                                  "minitron-8b", "mistral-large-123b",
+                                  "llama4-maverick-400b-a17b"])
+def test_decode_matches_forward(arch):
+    """Incremental decode logits == teacher-forced forward logits."""
+    cfg = get_model_config(arch).reduced()
+    if cfg.family == "moe":
+        cfg = cfg  # routing is batch-dependent; still deterministic here
+    params, _ = mdl.init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = _reduced_batch(cfg, B=B, S=S)
+    logits_full, _ = mdl.forward(cfg, params, batch)
+
+    cache, _ = mdl.init_decode_cache(cfg, B, S, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        # precompute cross-attention K/V from the encoder output
+        enc_logits = None
+        from repro.models import layers as Lmod
+        enc = batch["frames"].astype(jnp.float32)
+        import math
+        from repro.models.model import _sinusoidal, _scan
+        enc = enc + _sinusoidal(jnp.arange(enc.shape[1]),
+                                cfg.d_model)[None].astype(enc.dtype)
+
+        def enc_body(x, lp):
+            h = Lmod.apply_norm(cfg, lp["norm1"], x)
+            x = x + Lmod.apply_attention(cfg, lp["attn"], h, causal=False)
+            h = Lmod.apply_norm(cfg, lp["norm2"], x)
+            x = x + Lmod.apply_mlp(cfg, lp["mlp"], h)
+            return x, None
+        enc, _ = _scan(enc_body, enc, params["enc_layers"], False)
+        enc = Lmod.apply_norm(cfg, params["enc_final_norm"], enc)
+
+        def xkv(lp):
+            _, k, v = Lmod.qkv_project(cfg, lp["cross_attn"], enc, enc)
+            return k, v
+        ks, vs = jax.vmap(xkv)(params["dec_layers"])
+        cache["xk"] = ks.astype(cache["xk"].dtype)
+        cache["xv"] = vs.astype(cache["xv"].dtype)
+
+    toks = batch["tokens"]
+    outs = []
+    for i in range(S):
+        lg, cache = mdl.decode_step(cfg, params, cache, toks[:, i:i + 1],
+                                    jnp.asarray(i, jnp.int32))
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    if cfg.family == "vlm":
+        logits_full = logits_full[:, -S:]
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full, np.float32), atol=0.05, rtol=0.05)
+
+
+def test_vocab_padding_multiple_of_256():
+    for arch in sorted(ARCHS):
+        cfg = get_model_config(arch)
+        assert padded_vocab(cfg) % 256 == 0
+        assert padded_vocab(cfg) >= cfg.vocab_size
+
+
+def test_sliding_window_masks_old_tokens():
+    cfg = get_model_config("mixtral-8x7b").reduced(
+        num_layers=2, sliding_window=8)
+    params, _ = mdl.init_model(jax.random.PRNGKey(0), cfg)
+    b1 = _reduced_batch(cfg, B=1, S=32, seed=0)
+    # perturb tokens far outside the window of the last position
+    t2 = np.asarray(b1["tokens"]).copy()
+    t2[:, :8] = (t2[:, :8] + 7) % cfg.vocab_size
+    b2 = {"tokens": jnp.asarray(t2), "labels": b1["labels"]}
+    l1, _ = mdl.forward(cfg, params, b1)
+    l2, _ = mdl.forward(cfg, params, b2)
+    np.testing.assert_allclose(np.asarray(l1[:, -1], np.float32),
+                               np.asarray(l2[:, -1], np.float32),
+                               atol=1e-3)

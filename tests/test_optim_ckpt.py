@@ -1,0 +1,71 @@
+"""Optimizers, LR schedules, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.config import TrainConfig
+from repro.optim import adamw, make_lr_schedule, make_optimizer, sgd
+from repro.optim.optimizers import apply_updates
+
+
+def _quad_losses(opt_init, opt_update, lr, steps=200):
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt_init(params)
+    losses = []
+    for _ in range(steps):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt_update(g, state, params, lr)
+        params = apply_updates(params, upd)
+        losses.append(float(jnp.sum(params["w"] ** 2)))
+    return losses
+
+
+@pytest.mark.parametrize("maker,lr", [
+    (lambda: sgd(0.9), 0.05), (lambda: sgd(0.0), 0.1),
+    (lambda: adamw(), 0.1), (lambda: sgd(0.9, weight_decay=0.01), 0.05),
+])
+def test_optimizers_minimize_quadratic(maker, lr):
+    init, update = maker()
+    losses = _quad_losses(init, update, lr)
+    assert losses[-1] < 1e-3 * losses[0]
+
+
+def test_momentum_buffers_match_params_structure():
+    init, _ = sgd(0.9)
+    params = {"a": jnp.ones((3,)), "b": {"c": jnp.ones((2, 2))}}
+    state = init(params)
+    assert jax.tree.structure(state["mu"]) == jax.tree.structure(params)
+
+
+def test_make_optimizer_dispatch():
+    for name in ("sgd", "adamw"):
+        init, update = make_optimizer(TrainConfig(optimizer=name))
+        assert callable(init) and callable(update)
+
+
+def test_lr_schedules():
+    cfg = TrainConfig(lr_schedule="warmup_cosine", warmup_steps=10,
+                      total_steps=100, learning_rate=1.0)
+    sched = make_lr_schedule(cfg)
+    assert float(sched(jnp.asarray(0))) < 0.2
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=0.01)
+    assert float(sched(jnp.asarray(100))) < 0.01
+    const = make_lr_schedule(TrainConfig(lr_schedule="constant",
+                                         learning_rate=0.3))
+    assert float(const(jnp.asarray(7))) == pytest.approx(0.3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": np.random.randn(4, 3).astype(np.float32),
+                      "b": np.zeros(3, np.float32)},
+            "step": np.asarray(7)}
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, {"arch": "test"})
+    loaded, meta = load_checkpoint(path, like=tree)
+    assert meta["arch"] == "test"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

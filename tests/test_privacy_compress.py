@@ -1,0 +1,166 @@
+"""Secure aggregation, DP, and uplink compression (paper §4.1 / §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import FLConfig
+from repro.core.compress import (CompressionConfig, compress_tree,
+                                 compression_ratio)
+from repro.core.privacy import (DPConfig, clip_by_global_norm,
+                                gaussian_epsilon, global_norm, mask_update,
+                                masked_cluster_sum, privatize_update)
+from repro.kernels.quantize import (dequantize_int8_blocked,
+                                    quantize_int8_blocked,
+                                    quantize_int8_ref)
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation
+# ---------------------------------------------------------------------------
+
+def _tree(seed, shape=(7, 3)):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, shape),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (shape[1],))}
+
+
+def test_secure_agg_masks_cancel_in_sum():
+    cluster = [0, 1, 2, 3]
+    trees = [_tree(i) for i in cluster]
+    true_sum = jax.tree.map(lambda *ls: sum(ls), *trees)
+    sec_sum = masked_cluster_sum(trees, cluster, seed=5, scale=10.0)
+    for a, b in zip(jax.tree.leaves(true_sum), jax.tree.leaves(sec_sum)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_secure_agg_individual_updates_are_hidden():
+    cluster = [0, 1]
+    t = _tree(0)
+    masked = mask_update(t, 0, cluster, seed=5, scale=10.0)
+    diff = float(jnp.abs(masked["w"] - t["w"]).max())
+    assert diff > 1.0  # the mask actually obscures the values
+
+
+# ---------------------------------------------------------------------------
+# differential privacy
+# ---------------------------------------------------------------------------
+
+def test_clip_by_global_norm():
+    t = _tree(1)
+    c = clip_by_global_norm(t, 0.5)
+    assert float(global_norm(c)) <= 0.5 + 1e-5
+    # short vectors are untouched
+    small = jax.tree.map(lambda l: l * 1e-4, t)
+    c2 = clip_by_global_norm(small, 0.5)
+    for a, b in zip(jax.tree.leaves(small), jax.tree.leaves(c2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-8)
+
+
+def test_privatize_adds_calibrated_noise():
+    dp = DPConfig(clip_norm=1.0, noise_multiplier=1.0)
+    t = {"w": jnp.zeros((2000,))}
+    noisy = privatize_update(t, dp, jax.random.PRNGKey(0))
+    std = float(jnp.std(noisy["w"]))
+    assert 0.9 < std < 1.1  # sigma = 1.0
+
+
+def test_gaussian_epsilon_monotone():
+    assert gaussian_epsilon(0.5) > gaussian_epsilon(1.0) > \
+        gaussian_epsilon(4.0)
+    assert gaussian_epsilon(0.0) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_topk_keeps_largest_and_error_feedback_accumulates():
+    cfg = CompressionConfig(kind="topk", topk_frac=0.25)
+    t = {"w": jnp.asarray([1.0, -8.0, 0.1, 3.0, 0.2, -0.3, 6.0, 0.05])}
+    sent, res = compress_tree(cfg, t)
+    w = np.asarray(sent["w"])
+    assert (w != 0).sum() == 2  # 25% of 8
+    assert w[1] == -8.0 and w[6] == 6.0
+    # residual holds exactly what was not sent
+    np.testing.assert_allclose(np.asarray(res["w"]) + w,
+                               np.asarray(t["w"]), atol=1e-6)
+
+
+def test_int8_roundtrip_accuracy():
+    cfg = CompressionConfig(kind="int8", stochastic=False)
+    t = {"w": jax.random.normal(jax.random.PRNGKey(2), (4096,))}
+    sent, _ = compress_tree(cfg, t)
+    err = float(jnp.abs(sent["w"] - t["w"]).max())
+    amax = float(jnp.abs(t["w"]).max())
+    assert err <= amax / 127.0 + 1e-6
+
+
+@given(st.integers(1, 4000), st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_quantize_kernel_matches_ref(T, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (T,))
+    q1, s1 = quantize_int8_blocked(x, block=256, interpret=True)
+    q2, s2 = quantize_int8_ref(x, block=256)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    deq = dequantize_int8_blocked(q1, s1, block=256)
+    assert float(jnp.abs(deq - x).max()) <= float(
+        jnp.abs(x).max()) / 127.0 + 1e-6
+
+
+def test_compression_ratio():
+    assert compression_ratio(CompressionConfig("none")) == 1.0
+    assert compression_ratio(CompressionConfig("int8")) == 0.25
+    assert compression_ratio(
+        CompressionConfig("topk", topk_frac=0.05)) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: compressed / privatized CE-FedAvg still learns
+# ---------------------------------------------------------------------------
+
+def _sim(compression=None, dp=None):
+    from repro.core.cefedavg import FLSimulator
+    from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                      make_synthetic_classification)
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+    fl = FLConfig(num_clusters=4, devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, 0.5, 5)
+    data = {k: jnp.asarray(v) for k, v in
+            build_fl_data(x, y, parts, tx, ty, 64).items()}
+    return FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 4),
+                       apply_mlp_classifier, fl, data, lr=0.1,
+                       batch_size=16, compression=compression, dp=dp)
+
+
+def test_exact_equivalence_when_disabled():
+    s1 = _sim()
+    s2 = _sim(compression=CompressionConfig("none"))
+    s1.run(2)
+    s2.run(2)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_int8_compressed_training_learns():
+    s = _sim(compression=CompressionConfig("int8"))
+    hist = s.run(6)
+    assert hist["acc"][-1] > 0.8, hist["acc"]
+
+
+def test_topk_with_error_feedback_learns():
+    s = _sim(compression=CompressionConfig("topk", topk_frac=0.25))
+    hist = s.run(8)
+    assert hist["acc"][-1] > 0.7, hist["acc"]
+
+
+def test_dp_training_runs_and_degrades_gracefully():
+    s = _sim(dp=DPConfig(clip_norm=1.0, noise_multiplier=0.3))
+    hist = s.run(6)
+    assert np.isfinite(hist["loss"][-1])
+    assert hist["acc"][-1] > 0.4, hist["acc"]

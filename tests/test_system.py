@@ -1,0 +1,138 @@
+"""End-to-end behaviour tests for the CFEL/CE-FedAvg system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core.cefedavg import FLSimulator
+from repro.core.runtime import (HardwareProfile, RuntimeModel,
+                                WorkloadProfile)
+from repro.data.federated import (build_fl_data, cluster_partition,
+                                  dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import (MODEL_REGISTRY, apply_femnist_cnn,
+                              apply_mlp_classifier, init_femnist_cnn,
+                              init_mlp_classifier, init_vgg11, apply_vgg11)
+
+
+def _mlp_data(fl, cluster_iid=None, seed=0):
+    x, y = make_synthetic_classification(1600, 16, 8, seed=seed)
+    tx, ty = make_synthetic_classification(400, 16, 8, seed=seed + 1)
+    if cluster_iid is None:
+        parts = dirichlet_partition(y, fl.n, 0.5, seed)
+    else:
+        parts = cluster_partition(y, fl.num_clusters,
+                                  fl.devices_per_cluster,
+                                  cluster_iid=cluster_iid, seed=seed)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    return {k: jnp.asarray(v) for k, v in data.items()}
+
+
+def test_paper_models_param_counts():
+    """The paper's model sizes: CNN 6,603,710; VGG-11 9,750,922."""
+    p = init_femnist_cnn(jax.random.PRNGKey(0))
+    n_cnn = sum(x.size for x in jax.tree.leaves(p))
+    assert n_cnn == 6_603_710, n_cnn
+    p = init_vgg11(jax.random.PRNGKey(0))
+    n_vgg = sum(x.size for x in jax.tree.leaves(p))
+    assert n_vgg == 9_750_922, n_vgg
+
+
+def test_femnist_cnn_trains_on_synthetic_images():
+    from repro.data.federated import make_synthetic_images
+    x, y = make_synthetic_images(256, 28, 1, 62, seed=0)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    p = init_femnist_cnn(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p):
+        def loss(p):
+            lg = apply_femnist_cnn(p, x[:64])
+            lse = jax.nn.logsumexp(lg, -1)
+            pick = jnp.take_along_axis(lg, y[:64, None], -1)[:, 0]
+            return jnp.mean(lse - pick)
+        l, g = jax.value_and_grad(loss)(p)
+        return l, jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+    l0, p = step(p)
+    for _ in range(5):
+        l1, p = step(p)
+    assert float(l1) < float(l0)
+
+
+def test_cfel_end_to_end_time_to_accuracy():
+    """The paper's headline: CE-FedAvg reaches a target accuracy in less
+    wall time than FedAvg/Hier-FAvg under the §6.1 network model."""
+    target = 0.60
+    hw = HardwareProfile()
+    # network-bound regime (FEMNIST-CNN-sized payload, paper §6.1)
+    wl = WorkloadProfile(model_params=6_603_710, flops_per_step=2e9)
+    results = {}
+    for algo, m, dpc in [("ce_fedavg", 4, 2), ("hier_favg", 4, 2),
+                         ("fedavg", 1, 8)]:
+        fl = FLConfig(algorithm=algo, num_clusters=m,
+                      devices_per_cluster=dpc, tau=2, q=4, pi=10,
+                      topology="ring")
+        sim = FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 8),
+                          apply_mlp_classifier, fl, _mlp_data(fl),
+                          lr=0.1, batch_size=16)
+        rt = RuntimeModel(hw, wl)
+        hist = sim.run(10)
+        t_round = rt.round_time(algo, 2, 4, 10)
+        reach = next((i + 1 for i, a in enumerate(hist["acc"])
+                      if a >= target), None)
+        results[algo] = (reach, t_round,
+                         None if reach is None else reach * t_round)
+    ce = results["ce_fedavg"][2]
+    assert ce is not None, results
+    for other in ("hier_favg", "fedavg"):
+        t = results[other][2]
+        assert t is None or ce < t, results
+
+
+def test_cluster_iid_beats_cluster_noniid():
+    """Paper Fig. 5 direction: cluster-IID grouping converges faster."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=10, topology="ring")
+    accs = {}
+    for iid in (True, False):
+        sim = FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 8),
+                          apply_mlp_classifier, fl,
+                          _mlp_data(fl, cluster_iid=iid), lr=0.1,
+                          batch_size=16)
+        accs[iid] = sim.run(8)["acc"][-1]
+    assert accs[True] >= accs[False] - 0.02, accs
+
+
+def test_model_registry_complete():
+    assert set(MODEL_REGISTRY) == {"femnist_cnn", "vgg11", "mlp"}
+
+
+def test_configs_registry_and_shapes():
+    from repro.config import INPUT_SHAPES
+    from repro.configs import ARCHS, applicable_shapes, get_model_config
+    assert len(ARCHS) == 10
+    fams = {get_model_config(a).family for a in ARCHS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "encdec", "vlm"}
+    total = sum(len(applicable_shapes(a)) for a in ARCHS)
+    # 10 archs x 4 shapes - 6 long_500k skips (full-attention archs)
+    assert total == 34
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+
+
+def test_vgg11_forward_backward_smoke():
+    from repro.data.federated import make_synthetic_images
+    x, y = make_synthetic_images(32, 32, 3, 10, seed=1)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    p = init_vgg11(jax.random.PRNGKey(0))
+
+    def loss(p):
+        lg = apply_vgg11(p, x)
+        lse = jax.nn.logsumexp(lg, -1)
+        pick = jnp.take_along_axis(lg, y[:, None], -1)[:, 0]
+        return jnp.mean(lse - pick)
+    l, g = jax.jit(jax.value_and_grad(loss))(p)
+    assert np.isfinite(float(l))
+    gn = sum(float(jnp.sum(jnp.abs(leaf))) for leaf in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,92 @@
+"""Mixing-matrix / topology properties (Assumption 4) — incl. hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+TOPOS = ["ring", "complete", "star", "torus"]
+
+
+@pytest.mark.parametrize("name,m", [("ring", 8), ("complete", 8),
+                                    ("star", 8), ("torus", 9),
+                                    ("erdos_renyi", 8)])
+def test_mixing_matrix_assumption4(name, m):
+    from repro.config import FLConfig
+    cfg = FLConfig(topology=name, er_prob=0.4)
+    adj = topo.build_adjacency(name, m, cfg)
+    H = topo.mixing_matrix(adj)
+    # doubly stochastic + symmetric
+    np.testing.assert_allclose(H.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(H.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(H, H.T, atol=1e-12)
+    # supported on the graph
+    off = ~np.eye(m, dtype=bool)
+    assert np.all((H[off] > 0) <= adj[off])
+    # spectral gap
+    assert topo.zeta(H) < 1.0 - 1e-9
+
+
+def test_complete_graph_zeta_zero():
+    H = topo.mixing_matrix(topo.complete(6))
+    assert topo.zeta(H) < 1e-10  # paper: complete graphs have zeta = 0
+
+
+def test_ring_zeta_increases_with_size():
+    zs = [topo.zeta(topo.mixing_matrix(topo.ring(m))) for m in (4, 8, 16)]
+    assert zs[0] < zs[1] < zs[2]
+
+
+def test_er_connectivity_vs_p():
+    z_sparse = topo.zeta(topo.mixing_matrix(topo.erdos_renyi(16, 0.2, 1)))
+    z_dense = topo.zeta(topo.mixing_matrix(topo.erdos_renyi(16, 0.9, 1)))
+    assert z_dense < z_sparse  # better connectivity -> smaller zeta (Fig 6)
+
+
+@given(st.integers(3, 12), st.floats(0.2, 0.9), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_er_mixing_hypothesis(m, p, seed):
+    adj = topo.erdos_renyi(m, p, seed)
+    H = topo.mixing_matrix(adj)
+    np.testing.assert_allclose(H.sum(0), 1.0, atol=1e-10)
+    np.testing.assert_allclose(H, H.T, atol=1e-12)
+    assert topo.zeta(H) < 1.0
+
+
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=6))
+@settings(max_examples=25, deadline=None)
+def test_intra_operator_projection(sizes):
+    """V = B^T diag(c) B is an averaging projection: V² = V, V1 = 1."""
+    V = topo.intra_cluster_operator(sizes)
+    n = V.shape[0]
+    np.testing.assert_allclose(V @ V, V, atol=1e-10)
+    np.testing.assert_allclose(V @ np.ones(n), np.ones(n), atol=1e-10)
+    np.testing.assert_allclose(np.ones(n) @ V, np.ones(n), atol=1e-10)
+
+
+@given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_inter_operator_preserves_mean(m, dpc, pi):
+    """1/n is a right eigenvector of B^T diag(c) H^pi B (paper eq. 12)."""
+    sizes = [dpc] * m
+    H = topo.mixing_matrix(topo.ring(m))
+    W = topo.inter_cluster_operator(sizes, H, pi)
+    n = m * dpc
+    np.testing.assert_allclose(W @ np.ones(n), np.ones(n), atol=1e-9)
+    np.testing.assert_allclose(np.ones(n) @ W, np.ones(n), atol=1e-9)
+
+
+def test_gossip_converges_to_average():
+    """H^pi -> 11^T/m as pi grows (Assumption 4 consequence)."""
+    H = topo.mixing_matrix(topo.ring(8))
+    Hp = np.linalg.matrix_power(H, 200)
+    np.testing.assert_allclose(Hp, np.ones((8, 8)) / 8, atol=1e-6)
+
+
+def test_omega_decreasing_in_pi():
+    z = topo.zeta(topo.mixing_matrix(topo.ring(8)))
+    o1 = [topo.omega1(z, pi) for pi in (1, 5, 10)]
+    o2 = [topo.omega2(z, pi) for pi in (1, 5, 10)]
+    assert o1[0] > o1[1] > o1[2]
+    assert o2[0] > o2[1] > o2[2]
