@@ -1,5 +1,7 @@
 """Ablation driver: how backhaul topology and gossip steps interact
-(paper Fig. 6 + Theorem 1's Ω terms), on the simulation engine.
+(paper Fig. 6 + Theorem 1's Ω terms), on the simulation engine — plus what
+each topology costs the sharded trainer's gossip backends (bytes/round per
+``gossip_impl``, from the same GossipSchedule the trainer lowers).
 
   PYTHONPATH=src python examples/topology_study.py
 """
@@ -12,6 +14,8 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.config import FLConfig  # noqa: E402
 from repro.core.cefedavg import FLSimulator, make_w_schedule  # noqa: E402
+from repro.core.gossip import GossipSchedule  # noqa: E402
+from repro.core.runtime import gossip_traffic_per_round  # noqa: E402
 from repro.core.topology import omega1, omega2  # noqa: E402
 from repro.data.federated import (build_fl_data,  # noqa: E402
                                   dirichlet_partition,
@@ -20,9 +24,13 @@ from repro.models.cnn import (apply_mlp_classifier,  # noqa: E402
                               init_mlp_classifier)
 
 
+MODEL_BITS = 6_603_710 * 32.0      # the paper's FEMNIST CNN, fp32
+
+
 def main():
     print(f"{'topology':12s} {'pi':>3s} {'zeta':>6s} {'Omega1':>8s} "
-          f"{'Omega2':>8s} {'acc@6':>6s}")
+          f"{'Omega2':>8s} {'acc@6':>6s} {'sparse_MB':>9s} "
+          f"{'exact_MB':>8s} {'dense_MB':>8s}")
     for topo, pi in [("ring", 1), ("ring", 10), ("erdos_renyi", 1),
                      ("complete", 1)]:
         fl = FLConfig(num_clusters=8, devices_per_cluster=2, tau=2, q=2,
@@ -38,10 +46,25 @@ def main():
                           batch_size=16)
         hist = sim.run(6)
         z = sched.zeta
+        # what this backhaul costs each sharded gossip backend per round
+        mb = {}
+        for impl in ("sparse", "ringweight", "dense"):
+            tr = gossip_traffic_per_round(
+                impl, num_clusters=fl.num_clusters,
+                devices_per_cluster=fl.devices_per_cluster, pi=pi,
+                degrees=sched.degrees, model_bits=MODEL_BITS)
+            mb[impl] = tr["total_bits"] / 8e6
+        gs = GossipSchedule.build(sched.H, pi, fl.devices_per_cluster)
+        assert gs.models_received_total(fl.n) * MODEL_BITS / 8e6 == \
+            mb["sparse"]
         print(f"{topo:12s} {pi:3d} {z:6.3f} {omega1(z, pi):8.3f} "
-              f"{omega2(z, pi):8.3f} {hist['acc'][-1]:6.3f}")
+              f"{omega2(z, pi):8.3f} {hist['acc'][-1]:6.3f} "
+              f"{mb['sparse']:9.0f} {mb['ringweight']:8.0f} "
+              f"{mb['dense']:8.0f}")
     print("\nsmaller zeta / larger pi => smaller Omega terms => tighter "
-          "Theorem-1 bound (and empirically faster convergence).")
+          "Theorem-1 bound (and empirically faster convergence); the MB "
+          "columns are per-global-round backhaul traffic of each "
+          "gossip_impl backend on that topology.")
 
 
 if __name__ == "__main__":

@@ -140,9 +140,14 @@ class FLConfig:
     er_prob: float = 0.4           # for erdos_renyi
     topology_seed: int = 0
     mixing: str = "metropolis"     # metropolis | uniform_neighbor
-    # sharded-trainer mapping
-    gossip_impl: str = "dense"     # dense (paper-faithful einsum) | sparse (ppermute)
+    # sharded-trainer mapping; all three backends support every topology:
+    #   dense      paper-faithful (R,R)·(R,…) contraction (all-gather)
+    #   sparse     π gossip rounds of weighted neighbor ppermute matchings
+    #   ringweight exact H^π in M−1 weighted cyclic rotations
+    gossip_impl: str = "dense"
     cluster_axis: str = "data"     # mesh axis along which replicas/clusters live
+
+    GOSSIP_IMPLS = ("dense", "sparse", "ringweight")
 
     @property
     def n(self) -> int:
@@ -153,6 +158,24 @@ class FLConfig:
             "ce_fedavg", "fedavg", "hier_favg", "local_edge", "dec_local_sgd")
         assert self.tau >= 1 and self.q >= 1 and self.pi >= 1
         assert self.num_clusters >= 1 and self.devices_per_cluster >= 1
+        from repro.core.topology import TOPOLOGIES  # single source of truth
+        assert self.topology in TOPOLOGIES, \
+            f"unknown topology {self.topology!r}"
+        assert self.gossip_impl in self.GOSSIP_IMPLS, \
+            f"unknown gossip_impl {self.gossip_impl!r}"
+        if self.topology == "torus":
+            side = int(round(self.num_clusters ** 0.5))
+            assert side * side == self.num_clusters, \
+                "torus backhaul needs a square number of clusters"
+        if self.topology == "erdos_renyi":
+            assert 0.0 < self.er_prob <= 1.0, \
+                f"er_prob must be in (0, 1], got {self.er_prob}"
+        if self.gossip_impl in ("sparse", "ringweight"):
+            # the sparse backends lower the inter-cluster operator with
+            # collectives; that path exists for the gossip algorithms only
+            assert self.algorithm in ("ce_fedavg", "dec_local_sgd"), \
+                f"{self.gossip_impl!r} backend requires a gossip algorithm" \
+                f" (ce_fedavg/dec_local_sgd), not {self.algorithm!r}"
 
 
 # ---------------------------------------------------------------------------

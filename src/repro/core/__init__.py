@@ -9,4 +9,6 @@ from repro.core.topology import (  # noqa: F401
     inter_cluster_operator,
 )
 from repro.core.cefedavg import FLSimulator, make_w_schedule  # noqa: F401
-from repro.core.runtime import RuntimeModel, HardwareProfile  # noqa: F401
+from repro.core.gossip import GossipSchedule  # noqa: F401
+from repro.core.runtime import (RuntimeModel, HardwareProfile,  # noqa: F401
+                                gossip_traffic_per_round)

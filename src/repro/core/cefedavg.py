@@ -29,10 +29,16 @@ class WSchedule:
     H: np.ndarray            # m x m backhaul mixing matrix
     zeta: float
     cluster_sizes: List[int]
+    adj: np.ndarray          # m x m backhaul adjacency (bool)
 
     @property
     def n(self) -> int:
         return self.W_intra.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        """Backhaul degree of each cluster (traffic accounting)."""
+        return self.adj.sum(1).astype(np.int64)
 
 
 def make_w_schedule(fl: FLConfig) -> WSchedule:
@@ -59,7 +65,7 @@ def make_w_schedule(fl: FLConfig) -> WSchedule:
         W_inter = np.linalg.matrix_power(H, fl.pi)
     else:
         raise ValueError(fl.algorithm)
-    return WSchedule(W_intra, W_inter, H, topo.zeta(H), sizes)
+    return WSchedule(W_intra, W_inter, H, topo.zeta(H), sizes, adj)
 
 
 def mix(W, params):

@@ -92,6 +92,41 @@ class RuntimeModel:
         return rounds * self.round_time(algorithm, tau, q, pi, uplink_ratio)
 
 
+def gossip_traffic_per_round(impl: str, *, num_clusters: int,
+                             devices_per_cluster: int, pi: int,
+                             degrees: Sequence[int],
+                             model_bits: float) -> Dict[str, float]:
+    """Inter-cluster aggregation traffic of one global round, in bits.
+
+    Per-replica received bits (the latency-relevant number) and total
+    network bits, by ``gossip_impl`` backend:
+
+      dense      (R−1)·W   per replica — the (R,R)·(R,…) contraction
+                 all-gathers every other replica's model
+      sparse     π·deg(c)·W per replica (max over clusters reported) — π
+                 gossip rounds, each receiving one model per backhaul edge
+      ringweight (M−1)·W   per replica — M−1 weighted cyclic rotations
+
+    ``degrees`` are the backhaul degrees deg(c) of the M clusters.
+    """
+    M, dpc = num_clusters, devices_per_cluster
+    R = M * dpc
+    W = float(model_bits)
+    deg = list(degrees)
+    assert len(deg) == M, (len(deg), M)
+    if M == 1:
+        return {"per_replica_bits": 0.0, "total_bits": 0.0}
+    if impl == "dense":
+        per, tot = (R - 1) * W, R * (R - 1) * W
+    elif impl == "sparse":
+        per, tot = pi * max(deg) * W, pi * sum(deg) * dpc * W
+    elif impl == "ringweight":
+        per, tot = (M - 1) * W, R * (M - 1) * W
+    else:
+        raise ValueError(impl)
+    return {"per_replica_bits": per, "total_bits": tot}
+
+
 def convergence_bound(T: int, eta: float, L: float, sigma2: float,
                       eps2: float, eps_i2: float, n: int, m: int,
                       tau: int, q: int, z: float, pi: int,

@@ -6,14 +6,17 @@ parallel *within* a replica. One ``global_round`` = q edge rounds of
 (τ local SGD steps + intra-cluster averaging) followed by π gossip steps of
 inter-cluster mixing — a literal, sharded implementation of eq. (10)/(11).
 
-Two aggregation backends:
-- ``dense``  (paper-faithful baseline): the full W_t operators applied as a
-  (R,R)·(R,…) contraction over the replica axis — XLA lowers this to
+Three aggregation backends (see ``core.gossip`` for the sparse two):
+- ``dense``      (paper-faithful baseline): the full W_t operators applied
+  as a (R,R)·(R,…) contraction over the replica axis — XLA lowers this to
   all-gathers over the replica axes.
-- ``sparse`` (beyond-paper optimized): shard_map with
-  ``psum(axis_index_groups=clusters)`` for V and π rounds of neighbor
-  ``ppermute`` for H^π on a ring backhaul — O(deg·|θ|) neighbor traffic and
-  O(|θ|) peak memory instead of O(R·|θ|).
+- ``sparse``     (beyond-paper optimized): shard_map with
+  ``psum(axis_index_groups=clusters)`` for V and π gossip rounds of
+  weighted neighbor ``ppermute`` matchings realizing H on ANY connected
+  backhaul graph — O(π·deg·|θ|) neighbor traffic and O(|θ|) peak memory
+  instead of O(R·|θ|).
+- ``ringweight`` (beyond-paper optimized): the exact H^π in M−1 weighted
+  cyclic rotations — (M−1)·|θ| neighbor traffic, any topology.
 """
 from __future__ import annotations
 
@@ -22,12 +25,12 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro import sharding as sh
 from repro.config import ExperimentConfig, FLConfig
+from repro.core import gossip as gsp
 from repro.core.cefedavg import make_w_schedule, mix
 from repro.models import model as mdl
 from repro.optim import make_optimizer, make_lr_schedule
@@ -87,133 +90,13 @@ def stacked_abstract(model_cfg, R: int):
 
 
 # ---------------------------------------------------------------------------
-# sparse (shard_map) aggregation backend
+# sparse aggregation backends — see core.gossip for the schedule machinery
 # ---------------------------------------------------------------------------
 
-def _data_groups(geo: ReplicaGeometry, data_size: int):
-    dpc = geo.devices_per_cluster
-    return [list(range(c * dpc, (c + 1) * dpc))
-            for c in range(data_size // dpc)]
-
-
 def sparse_intra_mix(params, specs, mesh: Mesh, geo: ReplicaGeometry):
-    if geo.devices_per_cluster == 1:
-        return params
-    groups = _data_groups(geo, mesh.shape["data"])
-    inv = 1.0 / geo.devices_per_cluster
-
-    def body(p):
-        return jax.tree.map(
-            lambda x: (jax.lax.psum(x.astype(jnp.float32), "data",
-                                    axis_index_groups=groups) * inv
-                       ).astype(x.dtype), p)
-    return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs, check_vma=False)(params)
-
-
-def sparse_gossip(params, specs, mesh: Mesh, geo: ReplicaGeometry,
-                  H: np.ndarray, pi: int):
-    """π ring-gossip steps via neighbor ppermute (ring backhaul only)."""
-    M = geo.num_clusters
-    if M == 1:
-        return params
-    dpc = geo.devices_per_cluster
-    data = mesh.shape["data"]
-    has_pod = "pod" in mesh.axis_names and geo.num_pods > 1
-    w_self = jnp.asarray([H[c, c] for c in range(M)], jnp.float32)
-    w_right = jnp.asarray([H[c, (c + 1) % M] for c in range(M)], jnp.float32)
-    w_left = (jnp.zeros((M,), jnp.float32) if M == 2 else
-              jnp.asarray([H[c, (c - 1) % M] for c in range(M)], jnp.float32))
-
-    # receive-from-right: my slot gets the value of replica (r + dpc)
-    perm_from_right = [((s + dpc) % data, s) for s in range(data)]
-    perm_from_left = [((s - dpc) % data, s) for s in range(data)]
-
-    def body(p):
-        d_idx = jax.lax.axis_index("data")
-        p_idx = jax.lax.axis_index("pod") if has_pod else 0
-        local_c = d_idx // dpc
-        c = p_idx * geo.clusters_per_pod + local_c
-        on_right_edge = local_c == geo.clusters_per_pod - 1
-        on_left_edge = local_c == 0
-
-        def gossip_step(_, state):
-            q = state
-            def leaf(xf):
-                right = jax.lax.ppermute(xf, "data", perm_from_right)
-                left = jax.lax.ppermute(xf, "data", perm_from_left)
-                if has_pod:
-                    npod = geo.num_pods
-                    # right-edge cluster needs next pod's first cluster
-                    pr = [((s + 1) % npod, s) for s in range(npod)]
-                    pl = [((s - 1) % npod, s) for s in range(npod)]
-                    right_x = jax.lax.ppermute(right, "pod", pr)
-                    left_x = jax.lax.ppermute(left, "pod", pl)
-                    right = jnp.where(on_right_edge, right_x, right)
-                    left = jnp.where(on_left_edge, left_x, left)
-                return w_self[c] * xf + w_right[c] * right + w_left[c] * left
-            return jax.tree.map(leaf, q)
-
-        from repro.flags import analysis_mode
-        q0 = jax.tree.map(lambda x: x.astype(jnp.float32), p)
-        if analysis_mode():  # unroll so cost_analysis counts every step
-            q = q0
-            for i in range(pi):
-                q = gossip_step(i, q)
-        else:
-            q = jax.lax.fori_loop(0, pi, gossip_step, q0)
-        return jax.tree.map(lambda x, o: o.astype(x.dtype), p, q)
-
-    return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs, check_vma=False)(params)
-
-
-def cluster_ring_mix(params, specs, mesh: Mesh, geo: ReplicaGeometry,
-                     H: np.ndarray, pi: int):
-    """Beyond-paper: apply the *exact* inter-cluster operator H^π with
-    (m-1) weighted ring exchanges instead of π gossip rounds.
-
-    After intra-cluster averaging every replica holds its cluster's edge
-    model, so the cluster models can be rotated around a ring while each
-    replica accumulates Σ_c Hπ[c, mine]·y_c on the fly — (m-1)·|θ|
-    neighbor bytes instead of 2π·|θ|, identical result (H^π precomputed
-    host-side, m×m)."""
-    M = geo.num_clusters
-    if M == 1:
-        return params
-    Hpi = jnp.asarray(np.linalg.matrix_power(H, pi), jnp.float32)
-    dpc = geo.devices_per_cluster
-    data = mesh.shape["data"]
-    has_pod = "pod" in mesh.axis_names and geo.num_pods > 1
-    perm_from_right = [((s + dpc) % data, s) for s in range(data)]
-
-    def body(p):
-        d_idx = jax.lax.axis_index("data")
-        p_idx = jax.lax.axis_index("pod") if has_pod else 0
-        local_c = d_idx // dpc
-        c_me = p_idx * geo.clusters_per_pod + local_c
-        on_right_edge = local_c == geo.clusters_per_pod - 1
-
-        def rotate(leaf):
-            nxt = jax.lax.ppermute(leaf, "data", perm_from_right)
-            if has_pod:
-                npod = geo.num_pods
-                pr = [((s + 1) % npod, s) for s in range(npod)]
-                nxt_x = jax.lax.ppermute(nxt, "pod", pr)
-                nxt = jnp.where(on_right_edge, nxt_x, nxt)
-            return nxt
-
-        buf = jax.tree.map(lambda x: x.astype(jnp.float32), p)
-        acc = jax.tree.map(lambda b: Hpi[c_me, c_me] * b, buf)
-        for s in range(1, M):
-            buf = jax.tree.map(rotate, buf)
-            c_src = (c_me + s) % M
-            acc = jax.tree.map(
-                lambda a, b: a + Hpi[c_src, c_me] * b, acc, buf)
-        return jax.tree.map(lambda x, o: o.astype(x.dtype), p, acc)
-
-    return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs, check_vma=False)(params)
+    """Intra-cluster averaging (V) via grouped psum on the replica axis."""
+    return gsp.apply_cluster_mean(params, specs, mesh, geo.num_clusters,
+                                  geo.devices_per_cluster)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +120,13 @@ class ShardedCEFedAvg:
                                      remat=exp.train.remat))
         self.opt_init, self.opt_update = make_optimizer(exp.train)
         self.lr_fn = make_lr_schedule(exp.train)
+        impl = exp.fl.gossip_impl
+        self.gossip_schedule: Optional[gsp.GossipSchedule] = None
+        if impl in ("sparse", "ringweight") and \
+                self.fl.algorithm in ("ce_fedavg", "dec_local_sgd"):
+            self.gossip_schedule = gsp.GossipSchedule.build(
+                self.sched.H, self.fl.pi, self.geo.devices_per_cluster,
+                mode="exact" if impl == "ringweight" else "rounds")
         self._build_specs()
 
     # -- specs ---------------------------------------------------------------
@@ -284,18 +174,11 @@ class ShardedCEFedAvg:
         return mix(self.sched.W_intra, params)
 
     def _inter(self, params):
-        impl = self.exp.fl.gossip_impl
-        if impl in ("sparse", "ringweight") and \
-                self.fl.algorithm == "ce_fedavg":
-            assert self.fl.topology == "ring", \
-                "sparse/ringweight gossip backends assume a ring backhaul"
+        if self.gossip_schedule is not None:
             params = sparse_intra_mix(params, self.param_specs, self.mesh,
                                       self.geo)
-            if impl == "ringweight":
-                return cluster_ring_mix(params, self.param_specs, self.mesh,
-                                        self.geo, self.sched.H, self.fl.pi)
-            return sparse_gossip(params, self.param_specs, self.mesh,
-                                 self.geo, self.sched.H, self.fl.pi)
+            return gsp.apply_gossip(self.gossip_schedule, params,
+                                    self.param_specs, self.mesh)
         return mix(self.sched.W_inter, params)
 
     # -- the steps -----------------------------------------------------------

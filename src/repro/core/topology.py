@@ -53,16 +53,25 @@ def torus(m: int) -> np.ndarray:
 
 def erdos_renyi(m: int, p: float, seed: int = 0) -> np.ndarray:
     """Connected ER graph (resample until connected, as in the paper's
-    experiments with p in {0.2, 0.4, 0.6})."""
+    experiments with p in {0.2, 0.4, 0.6}).
+
+    If 1000 samples all come out disconnected (tiny p), the last sample is
+    superimposed with a ring — re-establishing the symmetric/zero-diagonal
+    invariants explicitly and asserting connectivity rather than returning
+    whatever the OR produced."""
     rng = np.random.default_rng(seed)
+    adj = np.zeros((m, m), bool)
     for _ in range(1000):
         adj = rng.random((m, m)) < p
         adj = np.triu(adj, 1)
         adj = adj | adj.T
         if _connected(adj):
             return adj
-    # fall back: superimpose a ring to guarantee connectivity
-    return adj | ring(m)
+    adj = adj | ring(m)
+    adj = adj | adj.T
+    np.fill_diagonal(adj, False)
+    assert _connected(adj), "ring fallback must be connected"
+    return adj
 
 
 def _connected(adj: np.ndarray) -> bool:

@@ -39,7 +39,12 @@ def main(argv=None):
     ap.add_argument("--tau", type=int, default=2)
     ap.add_argument("--q", type=int, default=2)
     ap.add_argument("--pi", type=int, default=4)
-    ap.add_argument("--gossip", choices=("dense", "sparse"), default="dense")
+    from repro.core.topology import TOPOLOGIES
+    ap.add_argument("--gossip", choices=FLConfig.GOSSIP_IMPLS,
+                    default="dense")
+    ap.add_argument("--topology", default="ring",
+                    choices=sorted(TOPOLOGIES))
+    ap.add_argument("--er-prob", type=float, default=0.4)
     ap.add_argument("--algorithm", default="ce_fedavg")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
@@ -60,8 +65,8 @@ def main(argv=None):
         model=cfg,
         fl=FLConfig(algorithm=args.algorithm, num_clusters=m,
                     devices_per_cluster=max(dp // m, 1), tau=args.tau,
-                    q=args.q, pi=args.pi, topology="ring",
-                    gossip_impl=args.gossip),
+                    q=args.q, pi=args.pi, topology=args.topology,
+                    er_prob=args.er_prob, gossip_impl=args.gossip),
         train=TrainConfig(optimizer="sgd", learning_rate=args.lr,
                           momentum=0.9),
     )

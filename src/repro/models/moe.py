@@ -6,6 +6,23 @@ computed from the sorted order, and tokens are scattered into a per-expert
 capacity buffer. Experts shard over the ``model`` mesh axis when divisible
 (llama4: 128 experts / 16 = 8 per chip), otherwise the expert FFN dim does
 (mixtral: 8 experts, d_ff sharded).
+
+Capacity priority is RECENCY: within an expert, the newest tokens keep
+their slots and the *oldest* assignments are dropped when capacity binds.
+For a causal model this keeps whether token t is served independent of any
+earlier token's routing (only tokens after t can displace it), so
+perturbing tokens outside a sliding-attention window can never change an
+in-window output through the dispatch path — sequence-order priority
+(drop-newest) leaked exactly that way.
+
+Tradeoff, stated plainly: some priority order must exist, and either
+direction violates an invariant *when capacity binds*. Drop-newest is
+causal but non-local (old tokens displace new ones — the sliding-window
+leak). Drop-oldest is local but lets a later token's routing decide
+whether t is served, an anti-causal bit in t's training logits. We pick
+locality: binding capacity is already a lossy regime, the decode path
+(single position) never binds, and exactness tests run with non-binding
+capacity where both orders coincide (zero drops).
 """
 from __future__ import annotations
 
@@ -104,7 +121,8 @@ def _moe_tokens_batched(cfg: ModelConfig, p: Params, x: jax.Array
     flat_g = gate_vals.reshape(B, A)
     flat_tok = jnp.broadcast_to(
         jnp.repeat(jnp.arange(S), k)[None], (B, A))
-    order = jnp.argsort(flat_e, axis=1)
+    # sort by (expert, newest-first) so capacity drops the oldest tokens
+    order = jnp.argsort(flat_e * A + (A - 1 - jnp.arange(A))[None], axis=1)
     rows = jnp.arange(B)[:, None]
     e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
     tok_sorted = jnp.take_along_axis(flat_tok, order, axis=1)
@@ -168,7 +186,8 @@ def _moe_tokens(cfg: ModelConfig, p: Params, xt: jax.Array
     flat_e = expert_ids.reshape(A)                          # (A,)
     flat_g = gate_vals.reshape(A)
     flat_tok = jnp.repeat(jnp.arange(T), k)
-    order = jnp.argsort(flat_e)                             # stable
+    # sort by (expert, newest-first) so capacity drops the oldest tokens
+    order = jnp.argsort(flat_e * A + (A - 1 - jnp.arange(A)))
     e_sorted = flat_e[order]
     tok_sorted = flat_tok[order]
     # position within expert = index - start-of-segment

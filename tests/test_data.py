@@ -1,7 +1,9 @@
 """Federated partitioner invariants (hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.federated import (build_fl_data, cluster_partition,
                                   dirichlet_partition,

@@ -1,0 +1,169 @@
+"""Topology-general gossip schedules: host-side structure + device parity.
+
+Host-side tests verify the schedule algebra (matchings are valid partial
+permutations covering each backhaul edge exactly once, and the weighted
+permutation sum reconstructs H / H^π). The subprocess tests assert the
+acceptance property: sparse and ringweight backends match the dense
+``mix(W_inter, ·)`` operator to ≤1e-5 on ring, torus, star, complete and
+erdos_renyi backhauls, single-pod and multi-pod.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.core import topology as topo
+from repro.core.gossip import GossipSchedule, color_edges
+from repro.core.runtime import gossip_traffic_per_round
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CASES = [("ring", 8), ("complete", 8), ("star", 8), ("torus", 9),
+         ("erdos_renyi", 8)]
+
+
+def _H(name, m):
+    cfg = FLConfig(topology=name, er_prob=0.4)
+    return topo.mixing_matrix(topo.build_adjacency(name, m, cfg))
+
+
+# ---------------------------------------------------------------------------
+# host-side structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,m", CASES)
+def test_edge_coloring_is_a_partition_of_valid_matchings(name, m):
+    adj = (np.abs(_H(name, m)) > 1e-12) & ~np.eye(m, dtype=bool)
+    colors = color_edges(adj)
+    seen = set()
+    for mt in colors:
+        # a matching: all sources distinct (dict keys give distinct dsts)
+        assert len(set(mt.values())) == len(mt)
+        for dst, src in mt.items():
+            assert adj[src, dst]
+            assert (src, dst) not in seen
+            seen.add((src, dst))
+    assert len(seen) == int(adj.sum())  # every directed edge exactly once
+
+
+@pytest.mark.parametrize("name,m", CASES)
+@pytest.mark.parametrize("dpc", [1, 2])
+def test_schedule_reconstructs_mixing_operator(name, m, dpc):
+    H = _H(name, m)
+    s = GossipSchedule.build(H, 3, dpc, "rounds")
+    np.testing.assert_allclose(s.dense_equivalent(), H, atol=1e-12)
+    e = GossipSchedule.build(H, 3, dpc, "exact")
+    np.testing.assert_allclose(e.dense_equivalent(),
+                               np.linalg.matrix_power(H, 3), atol=1e-12)
+
+
+@pytest.mark.parametrize("name,m", CASES)
+def test_traffic_formulas_match_schedule(name, m):
+    H = _H(name, m)
+    deg = ((np.abs(H) > 1e-12) & ~np.eye(m, dtype=bool)).sum(1)
+    for impl, mode in [("sparse", "rounds"), ("ringweight", "exact")]:
+        s = GossipSchedule.build(H, 4, 2, mode)
+        tr = gossip_traffic_per_round(
+            impl, num_clusters=m, devices_per_cluster=2, pi=4,
+            degrees=deg, model_bits=1.0)
+        assert s.models_received_per_replica() == tr["per_replica_bits"]
+        assert s.models_received_total(2 * m) == tr["total_bits"]
+    dense = gossip_traffic_per_round(
+        "dense", num_clusters=m, devices_per_cluster=2, pi=4,
+        degrees=deg, model_bits=1.0)
+    assert dense["per_replica_bits"] == 2 * m - 1
+
+
+def test_validate_rejects_bad_combinations():
+    with pytest.raises(AssertionError):
+        FLConfig(topology="hypercube").validate()
+    with pytest.raises(AssertionError):
+        FLConfig(gossip_impl="magic").validate()
+    with pytest.raises(AssertionError):
+        FLConfig(topology="torus", num_clusters=6).validate()
+    with pytest.raises(AssertionError):
+        FLConfig(topology="erdos_renyi", er_prob=0.0).validate()
+    with pytest.raises(AssertionError):
+        FLConfig(algorithm="hier_favg", gossip_impl="sparse").validate()
+    FLConfig(topology="torus", num_clusters=9, gossip_impl="sparse",
+             devices_per_cluster=1).validate()
+
+
+def test_erdos_renyi_fallback_invariants():
+    # p tiny enough that 1000 samples on m=16 nodes never connect
+    adj = topo.erdos_renyi(16, 1e-6, seed=0)
+    assert adj.dtype == bool
+    assert (adj == adj.T).all()
+    assert not adj.diagonal().any()
+    # the fallback superimposes a ring, so the ring edges must be present
+    assert (adj[topo.ring(16)]).all()
+    # connectivity is the point of the fallback
+    H = topo.mixing_matrix(adj)
+    assert topo.zeta(H) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# device parity (subprocess: needs a multi-device host)
+# ---------------------------------------------------------------------------
+
+PARITY = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import topology as topo
+from repro.core.cefedavg import mix
+from repro.core.gossip import (GossipSchedule, apply_cluster_mean,
+                               apply_gossip)
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(*{shape!r}), {axes!r})
+specs = P(tuple(a for a in ("pod", "data") if a in {axes!r}))
+M, dpc, pi = 4, 2, 3
+rng = np.random.default_rng(0)
+tree = {{"w": jnp.asarray(rng.normal(size=(8, 33)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(8, 5, 3)).astype(np.float32))}}
+tspecs = {{"w": specs, "b": specs}}
+worst = 0.0
+for name in ["ring", "star", "complete", "torus", "erdos_renyi"]:
+    H = topo.mixing_matrix(topo.build_adjacency(name, M))
+    W_inter = topo.inter_cluster_operator([dpc] * M, H, pi)
+    ref = jax.tree.map(np.asarray, mix(W_inter, tree))
+    for mode in ("rounds", "exact"):
+        s = GossipSchedule.build(H, pi, dpc, mode)
+        with mesh:
+            y = apply_cluster_mean(tree, tspecs, mesh, M, dpc)
+            y = apply_gossip(s, y, tspecs, mesh)
+        d = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(np.abs(np.asarray(a) - b).max()), y, ref)))
+        print(name, mode, d)
+        assert d < 1e-5, (name, mode, d)
+        worst = max(worst, d)
+print("WORST", worst)
+"""
+
+
+def _run_parity(shape, axes):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(PARITY.format(shape=shape, axes=axes))],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "WORST" in out.stdout
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_parity_all_topologies_singlepod():
+    out = _run_parity((8,), ("data",))
+    assert out.count("exact") == 5 and out.count("rounds") == 5
+
+
+@pytest.mark.slow
+def test_parity_all_topologies_multipod():
+    out = _run_parity((2, 4), ("pod", "data"))
+    assert out.count("exact") == 5 and out.count("rounds") == 5

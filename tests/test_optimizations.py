@@ -116,6 +116,7 @@ def test_attn_seq_shard_numerically_noop():
                                np.asarray(l2, np.float32), atol=1e-5)
 
 
+@pytest.mark.slow
 def test_ringweight_equals_dense_operator():
     code = """
 import jax, jax.numpy as jnp, numpy as np, dataclasses

@@ -11,6 +11,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a subprocess that jit-compiles full training rounds
+# on 8 fake devices — minutes, not seconds
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -33,12 +37,14 @@ from repro.configs import get_model_config
 from repro.core.sharded import ShardedCEFedAvg
 from repro.data.lm import synthetic_lm_batch
 
-def build(impl, mesh, algo="ce_fedavg", m=4, dpc=2, tau=2, q=2, pi=2):
+def build(impl, mesh, algo="ce_fedavg", m=4, dpc=2, tau=2, q=2, pi=2,
+          topology="ring"):
     cfg = get_model_config("qwen2-0.5b").reduced(
         d_model=128, num_layers=2, d_ff=256, vocab_size=256)
     exp = ExperimentConfig(model=cfg,
         fl=FLConfig(algorithm=algo, num_clusters=m, devices_per_cluster=dpc,
-                    tau=tau, q=q, pi=pi, topology="ring", gossip_impl=impl),
+                    tau=tau, q=q, pi=pi, topology=topology,
+                    gossip_impl=impl),
         train=TrainConfig(learning_rate=0.01))
     tr = ShardedCEFedAvg(exp, mesh)
     R = tr.geo.num_replicas
@@ -82,6 +88,23 @@ print("MAXDIFF", mx)
 assert mx < 1e-4, mx
 """)
     assert "MAXDIFF" in out
+
+
+def test_sparse_equals_dense_star_multipod():
+    """Non-ring backhaul through the full trainer, pods crossed."""
+    out = _run(COMMON + """
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4, 1),
+            ("pod", "data", "model"))
+pd, _ = run_round(*build("dense", mesh, topology="star")[:2], mesh)
+for impl in ("sparse", "ringweight"):
+    ps, _ = run_round(*build(impl, mesh, topology="star")[:2], mesh)
+    mx = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.max(np.abs(a.astype(np.float32) -
+                                         b.astype(np.float32)))), pd, ps)))
+    print("MAXDIFF", impl, mx)
+    assert mx < 1e-4, (impl, mx)
+""")
+    assert out.count("MAXDIFF") == 2
 
 
 def test_sharded_matches_simulator():

@@ -1,7 +1,9 @@
 """Mixing-matrix / topology properties (Assumption 4) — incl. hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import topology as topo
 
