@@ -15,8 +15,7 @@ import jax.numpy as jnp
 
 from repro.config import FLConfig
 from repro.core.cefedavg import FLSimulator
-from repro.core.runtime import (HardwareProfile, RuntimeModel,
-                                WorkloadProfile)
+from repro.core.runtime import RuntimeModel, paper_runtime_model
 from repro.data.federated import (build_fl_data, cluster_partition,
                                   dirichlet_partition,
                                   make_synthetic_classification,
@@ -53,7 +52,7 @@ def make_data(fl: FLConfig, *, full: bool = False, cluster_iid=None,
 
 
 def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
-             seed: int = 0) -> FLSimulator:
+             seed: int = 0, scenario=None) -> FLSimulator:
     if full:
         init = lambda k: init_femnist_cnn(k)            # noqa: E731
         apply = apply_femnist_cnn
@@ -62,7 +61,7 @@ def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
                                              MLP_CLASSES)
         apply = apply_mlp_classifier
     return FLSimulator(init, apply, fl, data, lr=lr, batch_size=16,
-                       seed=seed)
+                       seed=seed, scenario=scenario)
 
 
 def paper_runtime(fl: FLConfig, *, full: bool = False) -> RuntimeModel:
@@ -70,9 +69,7 @@ def paper_runtime(fl: FLConfig, *, full: bool = False) -> RuntimeModel:
     used even in MLP-surrogate mode: the *learning* dynamics come from the
     surrogate, but the wall-time question Fig. 2/3 asks is about the
     paper's 6.6M-parameter uploads over 10/50/1 Mb/s links."""
-    hw = HardwareProfile()  # paper constants (iPhone X, 10/50/1 Mb/s)
-    wl = WorkloadProfile(6_603_710, 13.30e6 * 50 * 3)
-    return RuntimeModel(hw, wl)
+    return paper_runtime_model()
 
 
 def time_to_accuracy(hist: Dict, round_time: float,

@@ -1,8 +1,10 @@
 """Quickstart: CE-FedAvg (Algorithm 1) on a synthetic federated task.
 
 Runs the paper-faithful simulation engine — 16 devices, 4 edge servers on a
-ring backhaul — then reports time-to-accuracy under the paper's §6.1
-network model for CE-FedAvg and the three baselines.
+ring backhaul — under the wall-clock event clock (core/clock.py), and
+reports time-to-accuracy under the paper's §6.1 network model for
+CE-FedAvg and the three baselines. See docs/SCENARIOS.md for running the
+same comparison with heterogeneous/mobile devices.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,8 +17,9 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.config import FLConfig  # noqa: E402
 from repro.core.cefedavg import FLSimulator  # noqa: E402
-from repro.core.runtime import (HardwareProfile, RuntimeModel,  # noqa: E402
-                                WorkloadProfile)
+from repro.core.clock import (run_wall_clock,  # noqa: E402
+                              time_to_accuracy)
+from repro.core.runtime import paper_runtime_model  # noqa: E402
 from repro.data.federated import (build_fl_data,  # noqa: E402
                                   dirichlet_partition,
                                   make_synthetic_classification)
@@ -28,10 +31,11 @@ def main():
     target = 0.9
     print("=== CFEL quickstart: 16 devices, 4 edge servers, ring backhaul")
     results = {}
+    rt = paper_runtime_model()
     for algo, m, dpc in [("ce_fedavg", 4, 4), ("hier_favg", 4, 4),
                          ("fedavg", 1, 16), ("local_edge", 4, 4)]:
         fl = FLConfig(algorithm=algo, num_clusters=m,
-                      devices_per_cluster=dpc, tau=2, q=8, pi=10,
+                      devices_per_cluster=dpc, tau=2, q=4, pi=10,
                       topology="ring")
         x, y = make_synthetic_classification(1600, 16, 8, seed=0)
         tx, ty = make_synthetic_classification(400, 16, 8, seed=1)
@@ -41,19 +45,14 @@ def main():
         sim = FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 8),
                           apply_mlp_classifier, fl, data, lr=0.1,
                           batch_size=16)
-        hist = sim.run(8)
-        rt = RuntimeModel(HardwareProfile(),
-                          WorkloadProfile(6_603_710, 13.3e6 * 50 * 3))
-        t_round = rt.round_time(algo, fl.tau, fl.q, fl.pi)
-        reach = next((r for r, a in zip(hist["round"], hist["acc"])
-                      if a >= target), None)
-        tta = None if reach is None else reach * t_round
-        results[algo] = (hist["acc"][-1], t_round, tta)
+        hist = run_wall_clock(sim, rt, 8)
+        tta = time_to_accuracy(hist, target)
+        results[algo] = tta
         print(f"  {algo:13s} final_acc={hist['acc'][-1]:.3f} "
-              f"round={t_round:7.1f}s "
+              f"round={hist['wall_time'][0]:7.1f}s "
               f"time_to_{target:.0%}="
               f"{'never' if tta is None else f'{tta:,.0f}s'}")
-    ce, fa = results["ce_fedavg"][2], results["fedavg"][2]
+    ce, fa = results["ce_fedavg"], results["fedavg"]
     if ce and fa:
         print(f"\nCE-FedAvg reaches {target:.0%} in "
               f"{(1 - ce / fa) * 100:.1f}% less time than cloud FedAvg "

@@ -179,6 +179,57 @@ class FLConfig:
 
 
 # ---------------------------------------------------------------------------
+# Wall-clock scenarios (heterogeneity / sampling / mobility)
+# ---------------------------------------------------------------------------
+
+SPEED_DISTS = ("homogeneous", "uniform", "lognormal", "bimodal")
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """A wall-clock scenario: who trains each round, how fast, and where.
+
+    Consumed by ``core.scenario.ScenarioEngine`` which re-draws the
+    participation mask and (under mobility) the cluster assignment B_t
+    between global rounds, and by ``core.clock.EventClock`` which charges
+    each round the slowest *participating* device's compute plus the
+    algorithm's communication terms (eq. 8 with the max_k rule).
+    """
+    name: str = "homogeneous"
+    # -- device-speed heterogeneity (multipliers on hw.device_flops) --------
+    speed_dist: str = "homogeneous"  # one of SPEED_DISTS
+    speed_spread: float = 0.0        # uniform: half-width; lognormal: sigma
+    slow_fraction: float = 0.25      # bimodal: fraction of slow devices
+    slow_factor: float = 0.1         # bimodal: slow devices' relative speed
+    # -- per-round client sampling ------------------------------------------
+    sample_fraction: float = 1.0     # fraction of devices training per round
+    dropout_prob: float = 0.0        # straggler dropout among the sampled
+    # -- mobility ------------------------------------------------------------
+    move_prob: float = 0.0           # per-device per-round re-association prob
+    seed: int = 0
+
+    def validate(self) -> None:
+        assert self.speed_dist in SPEED_DISTS, \
+            f"unknown speed_dist {self.speed_dist!r}"
+        assert self.speed_spread >= 0.0
+        if self.speed_dist == "uniform":
+            assert self.speed_spread < 1.0, "uniform spread must leave c>0"
+        assert 0.0 <= self.slow_fraction <= 1.0
+        assert 0.0 < self.slow_factor <= 1.0
+        assert 0.0 < self.sample_fraction <= 1.0
+        assert 0.0 <= self.dropout_prob < 1.0
+        assert 0.0 <= self.move_prob <= 1.0
+
+    @property
+    def trivial(self) -> bool:
+        """True iff the scenario cannot change the training trajectory
+        (full participation, no mobility) — the parity regime in which the
+        masked schedule must reduce to the static operators."""
+        return (self.sample_fraction >= 1.0 and self.dropout_prob == 0.0
+                and self.move_prob == 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Mesh / distribution
 # ---------------------------------------------------------------------------
 

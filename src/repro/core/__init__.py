@@ -7,8 +7,15 @@ from repro.core.topology import (  # noqa: F401
     cluster_assignment,
     intra_cluster_operator,
     inter_cluster_operator,
+    assignment_matrix,
+    masked_intra_operator,
+    masked_inter_operator,
 )
 from repro.core.cefedavg import FLSimulator, make_w_schedule  # noqa: F401
 from repro.core.gossip import GossipSchedule  # noqa: F401
 from repro.core.runtime import (RuntimeModel, HardwareProfile,  # noqa: F401
                                 gossip_traffic_per_round)
+from repro.core.scenario import (ScenarioEngine, SCENARIOS,  # noqa: F401
+                                 get_scenario, make_masked_w)
+from repro.core.clock import (EventClock, run_wall_clock,  # noqa: F401
+                              time_to_accuracy)

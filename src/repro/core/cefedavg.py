@@ -42,6 +42,11 @@ class WSchedule:
 
 
 def make_w_schedule(fl: FLConfig) -> WSchedule:
+    """Static mixing schedule (eq. 11 / Table 1): W_intra applied at
+    τ-boundaries, W_inter at qτ-boundaries, specialized per algorithm via
+    the §4.3 reductions (Hier-FAvg, FedAvg, Local-Edge, dec. local SGD).
+    Assumes equal clusters and full participation; the scenario engine
+    (core/scenario.py) builds the time-varying masked generalization."""
     fl.validate()
     m, n = fl.num_clusters, fl.n
     sizes = [fl.devices_per_cluster] * m
@@ -69,11 +74,17 @@ def make_w_schedule(fl: FLConfig) -> WSchedule:
 
 
 def mix(W, params):
-    """Apply a mixing matrix over the leading device axis of every leaf."""
+    """Apply a mixing operator over the leading device axis of every leaf:
+    x_k ← Σ_j W[k,j]·x_j (row application).
+
+    The paper's eq. 10 operators are symmetric doubly stochastic, where
+    row and column application coincide; the masked/unequal-cluster
+    generalizations (core/scenario.py) are only row-stochastic, so the
+    row form is the correct one for both."""
     Wj = jnp.asarray(W, jnp.float32)
 
     def one(leaf):
-        out = jnp.tensordot(Wj, leaf.astype(jnp.float32), axes=[[0], [0]])
+        out = jnp.tensordot(Wj, leaf.astype(jnp.float32), axes=[[1], [0]])
         return out.astype(leaf.dtype)
     return jax.tree.map(one, params)
 
@@ -88,12 +99,15 @@ class FLSimulator:
     init_fn(key) -> params;  apply_fn(params, x) -> logits.
     data: dict with xs (n, N, ...), ys (n, N) — per-device training shards;
           test_x, test_y — the common test set.
+    scenario: optional config.ScenarioConfig — per-round client sampling,
+          straggler dropout and device mobility (core/scenario.py); pair
+          with core.clock.run_wall_clock for time-to-accuracy curves.
     """
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl: FLConfig,
                  data: Dict[str, Any], *, lr: float = 0.05,
                  momentum: float = 0.9, batch_size: int = 50, seed: int = 0,
-                 compression=None, dp=None):
+                 compression=None, dp=None, scenario=None):
         self.fl = fl
         self.apply_fn = apply_fn
         self.sched = make_w_schedule(fl)
@@ -103,6 +117,19 @@ class FLSimulator:
         self.lr, self.momentum, self.batch = lr, momentum, batch_size
         self.compression = compression  # core.compress.CompressionConfig
         self.dp = dp                    # core.privacy.DPConfig
+        # wall-clock scenario (config.ScenarioConfig): per-round sampling,
+        # mobility and heterogeneity — None keeps the static schedule
+        if scenario is not None:
+            from repro.core.scenario import ScenarioEngine
+            self.engine = ScenarioEngine(scenario, fl)
+        else:
+            self.engine = None
+        # current cluster assignment B_t (mobility re-draws it per round)
+        self.labels = np.repeat(np.arange(fl.num_clusters),
+                                fl.devices_per_cluster)
+        self._W_intra_j = jnp.asarray(self.sched.W_intra, jnp.float32)
+        self._W_inter_j = jnp.asarray(self.sched.W_inter, jnp.float32)
+        self._full_mask = jnp.ones((n,), jnp.float32)
         # Algorithm 1 initializes every device from its edge model y_{0,0};
         # we use one shared init (common FL practice), so params are
         # cluster-uniform from the start.
@@ -125,24 +152,38 @@ class FLSimulator:
 
     # -- one global round, jitted ------------------------------------------
     def _build_round(self):
+        """The jitted global round. W_intra/W_inter/mask are *arguments*
+        (not closure constants) so the scenario engine can re-draw them
+        between rounds without recompiling: masked devices take no local
+        steps (their params and momentum are frozen via ``where``) and the
+        operators are whatever (possibly unequal/masked) matrices the
+        caller passes — the static schedule with a full mask reproduces
+        the original fixed-schedule round bit-for-bit."""
         fl = self.fl
-        W_intra = jnp.asarray(self.sched.W_intra, jnp.float32)
-        W_inter = jnp.asarray(self.sched.W_inter, jnp.float32)
         n = self.sched.n
         N = self.data["xs"].shape[1]
         grad_fn = jax.grad(self._loss)
 
-        def local_step(carry, key):
-            params, mom = carry
-            idx = jax.random.randint(key, (n, self.batch), 0, N)
-            xb = jax.vmap(lambda x, i: x[i])(self.data["xs"], idx)
-            yb = jax.vmap(lambda y, i: y[i])(self.data["ys"], idx)
-            grads = jax.vmap(grad_fn)(params, xb, yb)
-            mom = jax.tree.map(
-                lambda v, g: self.momentum * v + g, mom, grads)
-            params = jax.tree.map(
-                lambda p, v: p - self.lr * v, params, mom)
-            return (params, mom), None
+        def bcast(act, leaf):
+            return act.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+        def make_local_step(act):
+            def local_step(carry, key):
+                params, mom = carry
+                idx = jax.random.randint(key, (n, self.batch), 0, N)
+                xb = jax.vmap(lambda x, i: x[i])(self.data["xs"], idx)
+                yb = jax.vmap(lambda y, i: y[i])(self.data["ys"], idx)
+                grads = jax.vmap(grad_fn)(params, xb, yb)
+                mom = jax.tree.map(
+                    lambda v, g: jnp.where(bcast(act, v),
+                                           self.momentum * v + g, v),
+                    mom, grads)
+                params = jax.tree.map(
+                    lambda p, v: jnp.where(bcast(act, p),
+                                           p - self.lr * v, p),
+                    params, mom)
+                return (params, mom), None
+            return local_step
 
         comp, dp = self.compression, self.dp
 
@@ -162,25 +203,32 @@ class FLSimulator:
                 )(delta, residual, keys)
             return delta, residual
 
-        def edge_round(carry, key):
-            params0, mom, residual = carry
-            keys = jax.random.split(key, fl.tau)
-            (params, mom), _ = jax.lax.scan(local_step, (params0, mom),
-                                            keys)
-            if comp is None and dp is None:
-                params = mix(W_intra, params)
-            else:
-                # devices upload (privatized/compressed) deltas; the edge
-                # reconstructs x_start + V·delta (exact when both are off)
-                delta = jax.tree.map(lambda a, b: a - b, params, params0)
-                delta, residual = upload_transform(
-                    delta, residual, jax.random.fold_in(key, 7))
-                params = jax.tree.map(
-                    lambda p0, d: p0 + d, params0, mix(W_intra, delta))
-            return (params, mom, residual), None
+        def make_edge_round(W_intra, act):
+            local_step = make_local_step(act)
+
+            def edge_round(carry, key):
+                params0, mom, residual = carry
+                keys = jax.random.split(key, fl.tau)
+                (params, mom), _ = jax.lax.scan(local_step, (params0, mom),
+                                                keys)
+                if comp is None and dp is None:
+                    params = mix(W_intra, params)
+                else:
+                    # devices upload (privatized/compressed) deltas; the edge
+                    # reconstructs x_start + V·delta (exact when both are off)
+                    delta = jax.tree.map(lambda a, b: a - b, params, params0)
+                    delta, residual = upload_transform(
+                        delta, residual, jax.random.fold_in(key, 7))
+                    params = jax.tree.map(
+                        lambda p0, d: p0 + d, params0, mix(W_intra, delta))
+                return (params, mom, residual), None
+            return edge_round
 
         @jax.jit
-        def global_round(params, mom, residual, key):
+        def global_round(params, mom, residual, key, W_intra, W_inter,
+                         mask):
+            act = mask > 0.5
+            edge_round = make_edge_round(W_intra, act)
             keys = jax.random.split(key, fl.q)
             (params, mom, residual), _ = jax.lax.scan(
                 edge_round, (params, mom, residual), keys)
@@ -190,13 +238,36 @@ class FLSimulator:
         return global_round
 
     # -- driver -------------------------------------------------------------
+    def step_round(self):
+        """Advance ONE global round.
+
+        With a scenario attached, first realizes this round's plan
+        (mobility re-draws B_t, sampling draws the cohort) and feeds the
+        induced masked operators to the jitted round; otherwise replays
+        the static schedule with full participation. Returns the
+        ``RoundPlan`` (or None without a scenario) so callers — e.g. the
+        wall-clock harness in core/clock.py — can charge the cohort."""
+        if self.engine is not None:
+            plan = self.engine.step()
+            self.labels = plan.labels
+            W_intra = jnp.asarray(plan.W_intra, jnp.float32)
+            W_inter = jnp.asarray(plan.W_inter, jnp.float32)
+            mask = jnp.asarray(plan.mask, jnp.float32)
+        else:
+            plan = None
+            W_intra, W_inter = self._W_intra_j, self._W_inter_j
+            mask = self._full_mask
+        self.key, k = jax.random.split(self.key)
+        self.params, self.mom, self.residual = self._round(
+            self.params, self.mom, self.residual, k, W_intra, W_inter,
+            mask)
+        return plan
+
     def run(self, rounds: int, eval_every: int = 1,
             eval_batch: int = 512) -> Dict[str, List[float]]:
         hist: Dict[str, List[float]] = {"round": [], "acc": [], "loss": []}
         for r in range(rounds):
-            self.key, k = jax.random.split(self.key)
-            self.params, self.mom, self.residual = self._round(
-                self.params, self.mom, self.residual, k)
+            self.step_round()
             if (r + 1) % eval_every == 0:
                 acc, loss = self.evaluate(eval_batch)
                 hist["round"].append(r + 1)
@@ -205,12 +276,13 @@ class FLSimulator:
         return hist
 
     def edge_models(self):
-        """Cluster-averaged (edge) models — what the paper evaluates."""
-        V = topo.intra_cluster_operator(self.sched.cluster_sizes)
-        mixed = mix(V, self.params)
-        # one representative per cluster (first device of each)
-        starts = np.cumsum([0] + self.sched.cluster_sizes[:-1])
-        return jax.tree.map(lambda l: l[starts], mixed)
+        """Cluster-averaged (edge) models y_t — what the paper evaluates.
+        Uses the CURRENT assignment B_t (mobility moves devices between
+        clusters, so membership is re-read every call)."""
+        B = topo.assignment_matrix(self.labels, self.fl.num_clusters)
+        # mix() row-applies, so a rectangular (m, n) averaging operator
+        # maps the n device models straight to the m edge models
+        return mix(topo.masked_cluster_average(B), self.params)
 
     def global_model(self):
         return jax.tree.map(lambda l: jnp.mean(l, 0), self.params)

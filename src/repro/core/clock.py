@@ -1,0 +1,97 @@
+"""Event clock: wall-clock time-to-accuracy accounting (paper §6, Figs. 5–6).
+
+``FLSimulator`` measures accuracy per *round*; the paper's headline claim
+is accuracy per *second*. :class:`EventClock` converts rounds to seconds
+by charging each global round
+
+    max over participating devices of  qτ·C/c_k      (compute, eq. 8)
+  + the algorithm's communication terms               (RuntimeModel.comm_time)
+
+so a straggler paces the round only when it actually participates, and
+:func:`run_wall_clock` couples a (scenario-aware) simulator to that clock,
+emitting ``(wall_time, acc)`` curves and :func:`time_to_accuracy`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.config import FLConfig
+from repro.core.runtime import RuntimeModel
+
+
+class EventClock:
+    """Accumulates simulated wall time, one global round at a time."""
+
+    def __init__(self, rt: RuntimeModel, fl: FLConfig):
+        self.rt, self.fl = rt, fl
+        self.now = 0.0
+
+    def charge_round(self, speeds: Optional[Sequence[float]] = None,
+                     uplink_ratio: float = 1.0) -> float:
+        """Advance the clock by one global round of ``fl.algorithm``.
+
+        ``speeds`` are the FLOP/s of the devices that participated this
+        round (the max_k rule runs over them only); omitted means the
+        RuntimeModel's homogeneous/default speeds. Returns the new time.
+        """
+        fl = self.fl
+        comp = self.rt.compute_time(fl.q * fl.tau, speeds)
+        comm = self.rt.comm_time(fl.algorithm, fl.q, fl.pi, uplink_ratio)
+        self.now += comp + comm
+        return self.now
+
+
+def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
+                   eval_every: int = 1, eval_batch: int = 512,
+                   uplink_ratio: float = 1.0) -> Dict[str, List[float]]:
+    """Drive ``sim`` (an FLSimulator) for ``rounds`` global rounds under
+    the event clock, returning a history dict with ``round``,
+    ``wall_time``, ``acc``, ``loss`` and ``participants`` columns.
+
+    With a scenario attached to the simulator, each round's compute charge
+    is paced by the slowest device in that round's realized cohort
+    (``ScenarioEngine.active_speeds`` × the profile's device_flops);
+    without one, by the RuntimeModel's own speeds.
+    """
+    clock = EventClock(rt, sim.fl)
+    hist: Dict[str, List[float]] = {
+        "round": [], "wall_time": [], "acc": [], "loss": [],
+        "participants": []}
+    for r in range(rounds):
+        plan = sim.step_round()
+        if plan is not None:
+            mult = sim.engine.active_speeds(plan)
+            speeds = mult * rt.hw.device_flops
+            participants = int(plan.mask.sum())
+        else:
+            speeds = None
+            participants = sim.fl.n
+        t = clock.charge_round(speeds, uplink_ratio)
+        if (r + 1) % eval_every == 0:
+            acc, loss = sim.evaluate(eval_batch)
+            hist["round"].append(r + 1)
+            hist["wall_time"].append(t)
+            hist["acc"].append(acc)
+            hist["loss"].append(loss)
+            hist["participants"].append(participants)
+    return hist
+
+
+def time_to_accuracy(hist: Dict[str, List[float]],
+                     target: float) -> Optional[float]:
+    """First wall-clock time at which the evaluated accuracy reached
+    ``target``, or None if the curve never got there."""
+    for t, a in zip(hist["wall_time"], hist["acc"]):
+        if a >= target:
+            return float(t)
+    return None
+
+
+def summarize(hist: Dict[str, List[float]], target: float) -> str:
+    """One-line human summary of a wall-clock curve."""
+    tta = time_to_accuracy(hist, target)
+    final = hist["acc"][-1] if hist["acc"] else float("nan")
+    total = hist["wall_time"][-1] if hist["wall_time"] else 0.0
+    reach = "never" if tta is None else f"{tta:,.0f}s"
+    return (f"final_acc={final:.3f} total={total:,.0f}s "
+            f"time_to_{target:.0%}={reach}")

@@ -46,50 +46,81 @@ class WorkloadProfile:
     model_params: int                 # parameter count
     flops_per_step: float             # C: FLOPs of one SGD step (fwd+bwd)
 
-    @property
-    def model_bits(self) -> float:
-        return self.model_params * 8.0  # placeholder, bytes set by hw
+    def model_bits(self, hw: HardwareProfile) -> float:
+        """W in eq. (8): the parameter payload at the wire precision the
+        hardware profile transmits (``hw.bytes_per_param``)."""
+        return self.model_params * hw.bytes_per_param * 8.0
 
 
 class RuntimeModel:
+    """Eq. (8) wall-clock model, split into compute and communication.
+
+    ``device_speeds`` (FLOP/s per device) makes the compute term the
+    paper's max_k qτC/c_k straggler rule; ``compute_time`` also accepts a
+    per-call subset of speeds so the event clock (core/clock.py) can charge
+    only the devices participating in a given round."""
+
     def __init__(self, hw: HardwareProfile, wl: WorkloadProfile,
                  device_speeds: Optional[Sequence[float]] = None):
         self.hw = hw
         self.wl = wl
         self.speeds = list(device_speeds) if device_speeds else None
 
-    def _compute_time(self, steps: int) -> float:
-        slowest = min(self.speeds) if self.speeds else self.hw.device_flops
+    def compute_time(self, steps: int,
+                     speeds: Optional[Sequence[float]] = None) -> float:
+        """max_k steps·C/c_k — the slowest (participating) device paces
+        every aggregation boundary."""
+        if speeds is not None and len(speeds):
+            slowest = min(speeds)
+        elif self.speeds:
+            slowest = min(self.speeds)
+        else:
+            slowest = self.hw.device_flops
         return steps * self.wl.flops_per_step / slowest
 
-    def _bits(self) -> float:
-        return self.wl.model_params * self.hw.bytes_per_param * 8.0
-
-    def round_time(self, algorithm: str, tau: int, q: int, pi: int,
-                   uplink_ratio: float = 1.0) -> float:
-        """Wall time of ONE global round (qτ local steps) under eq. (8).
+    def comm_time(self, algorithm: str, q: int, pi: int,
+                  uplink_ratio: float = 1.0) -> float:
+        """Communication terms of one global round under eq. (8).
 
         ``uplink_ratio`` scales the device→edge payload (compression,
         core.compress.compression_ratio)."""
-        comp = self._compute_time(q * tau)
-        W = self._bits()
+        W = self.wl.model_bits(self.hw)
         Wu = W * uplink_ratio
         hw = self.hw
         if algorithm == "ce_fedavg":
-            return comp + q * Wu / hw.b_d2e + pi * W / hw.b_e2e
+            return q * Wu / hw.b_d2e + pi * W / hw.b_e2e
         if algorithm == "hier_favg":
-            return comp + (q - 1) * Wu / hw.b_d2e + W / hw.b_d2c
+            return (q - 1) * Wu / hw.b_d2e + W / hw.b_d2c
         if algorithm == "fedavg":
-            return comp + Wu / hw.b_d2c
+            return Wu / hw.b_d2c
         if algorithm == "local_edge":
-            return comp + q * Wu / hw.b_d2e
+            return q * Wu / hw.b_d2e
         if algorithm == "dec_local_sgd":
-            return comp + pi * W / hw.b_e2e
+            return pi * W / hw.b_e2e
         raise ValueError(algorithm)
+
+    def round_time(self, algorithm: str, tau: int, q: int, pi: int,
+                   uplink_ratio: float = 1.0,
+                   speeds: Optional[Sequence[float]] = None) -> float:
+        """Wall time of ONE global round (qτ local steps) under eq. (8)."""
+        return (self.compute_time(q * tau, speeds)
+                + self.comm_time(algorithm, q, pi, uplink_ratio))
 
     def total_time(self, algorithm: str, rounds: int, tau: int, q: int,
                    pi: int, uplink_ratio: float = 1.0) -> float:
         return rounds * self.round_time(algorithm, tau, q, pi, uplink_ratio)
+
+
+def paper_runtime_model(
+        device_speeds: Optional[Sequence[float]] = None) -> RuntimeModel:
+    """The §6.1 reference runtime: iPhone-class devices over 10/50/1 Mb/s
+    links carrying the FEMNIST CNN (6,603,710 params; C = 13.3 MFLOPs ×
+    batch 50 × fwd+bwd factor 3). The single source for the constants the
+    quickstart, the time-to-accuracy CLI and the benchmarks all price
+    against."""
+    return RuntimeModel(HardwareProfile(),
+                        WorkloadProfile(6_603_710, 13.30e6 * 50 * 3),
+                        device_speeds)
 
 
 def gossip_traffic_per_round(impl: str, *, num_clusters: int,

@@ -1,0 +1,213 @@
+"""Scenario engine: device heterogeneity, client sampling and mobility.
+
+The paper's headline result is *wall-clock time to a target accuracy*
+(§6, Figs. 5–6) on heterogeneous mobile devices, but the static
+``make_w_schedule`` assumes every device trains every round in a fixed,
+equal-size cluster. A :class:`ScenarioEngine` lifts those assumptions one
+global round at a time:
+
+- **heterogeneity** — per-device speed multipliers drawn once from a
+  uniform / lognormal / bimodal distribution (all mean ≈ 1 so profiles
+  stay comparable to the homogeneous §6.1 constants);
+- **client sampling** — each round a ⌈fraction·n⌉ cohort is drawn, then
+  thinned by straggler dropout; non-participants neither compute nor
+  upload, and the V/A/H-operators are renormalized over the cohort
+  (``topology.masked_*``);
+- **mobility** — each device re-associates to a uniformly random other
+  edge with probability ``move_prob`` per round (never emptying its
+  current cluster), re-drawing the assignment matrix B_t and therefore
+  the W_intra/W_inter pair for unequal, time-varying clusters.
+
+``ScenarioEngine.step()`` returns a :class:`RoundPlan` whose operators
+``FLSimulator`` feeds to its jitted round; ``core.clock.EventClock``
+charges the plan's cohort for wall time. When the scenario is trivial
+(full participation, no mobility) every plan reproduces the static
+``make_w_schedule`` operators exactly — the parity regime asserted in
+``tests/test_scenario.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.config import FLConfig, ScenarioConfig
+from repro.core import topology as topo
+
+
+def sample_speed_multipliers(sc: ScenarioConfig, n: int,
+                             rng: np.random.Generator) -> np.ndarray:
+    """Per-device relative speeds c_k / c̄ for the scenario's distribution.
+
+    Multipliers are positive and have mean ≈ 1, so the homogeneous
+    hardware profile's ``device_flops`` stays the fleet average."""
+    if sc.speed_dist == "homogeneous":
+        return np.ones(n)
+    if sc.speed_dist == "uniform":
+        lo, hi = 1.0 - sc.speed_spread, 1.0 + sc.speed_spread
+        return rng.uniform(lo, hi, n)
+    if sc.speed_dist == "lognormal":
+        sigma = sc.speed_spread
+        return rng.lognormal(mean=-0.5 * sigma * sigma, sigma=sigma, size=n)
+    if sc.speed_dist == "bimodal":
+        slow = rng.random(n) < sc.slow_fraction
+        return np.where(slow, sc.slow_factor, 1.0)
+    raise ValueError(sc.speed_dist)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """One global round's realized scenario: who participates, where each
+    device lives, and the mixing operators those two facts induce."""
+    round_index: int
+    num_clusters: int         # m
+    labels: np.ndarray        # (n,) cluster id per device (B_t rows)
+    mask: np.ndarray          # (n,) float 0/1 participation
+    W_intra: np.ndarray       # (n,n) masked/unequal intra-cluster operator
+    W_inter: np.ndarray       # (n,n) masked/unequal inter-cluster operator
+
+    @property
+    def active(self) -> np.ndarray:
+        """Boolean participation (the cohort the clock charges)."""
+        return self.mask > 0
+
+    @property
+    def cluster_sizes(self) -> np.ndarray:
+        """Device count per cluster under this round's B_t."""
+        return np.bincount(self.labels, minlength=self.num_clusters)
+
+
+def make_masked_w(fl: FLConfig, labels: np.ndarray, mask: np.ndarray,
+                  H: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-round (W_intra, W_inter) for the algorithm under assignment
+    ``labels`` and participation ``mask`` — the time-varying eq. 11.
+
+    Reduces to :func:`repro.core.cefedavg.make_w_schedule`'s operators
+    when ``labels`` is the contiguous equal-cluster assignment and
+    ``mask`` is all-ones."""
+    n = labels.shape[0]
+    eye = np.eye(n)
+    B = topo.assignment_matrix(labels, fl.num_clusters)
+    if fl.algorithm == "ce_fedavg":
+        return (topo.masked_intra_operator(B, mask),
+                topo.masked_inter_operator(B, H, fl.pi, mask))
+    if fl.algorithm == "hier_favg":
+        return (topo.masked_intra_operator(B, mask),
+                topo.masked_global_average(n, mask))
+    if fl.algorithm == "fedavg":
+        return eye, topo.masked_global_average(n, mask)
+    if fl.algorithm == "local_edge":
+        V = topo.masked_intra_operator(B, mask)
+        return V, V
+    if fl.algorithm == "dec_local_sgd":
+        Hp = np.linalg.matrix_power(H, fl.pi)
+        return eye, topo.renormalize_rows(Hp, mask)
+    raise ValueError(fl.algorithm)
+
+
+class ScenarioEngine:
+    """Stateful per-round realization of a :class:`ScenarioConfig`.
+
+    Deterministic given ``sc.seed``: two engines with the same config
+    produce the same speed draw, cohort sequence and mobility trace, so
+    different algorithms can be compared under identical conditions."""
+
+    def __init__(self, sc: ScenarioConfig, fl: FLConfig):
+        sc.validate()
+        fl.validate()
+        self.sc, self.fl = sc, fl
+        self.rng = np.random.default_rng(sc.seed)
+        self.labels = np.repeat(np.arange(fl.num_clusters),
+                                fl.devices_per_cluster)
+        adj = topo.build_adjacency(fl.topology, fl.num_clusters, fl)
+        self.H = topo.mixing_matrix(adj, fl.mixing)
+        self.speed_multipliers = sample_speed_multipliers(sc, fl.n, self.rng)
+        self.round_index = 0
+
+    # -- per-round draws -----------------------------------------------------
+    def _step_mobility(self) -> None:
+        """Re-associate each device w.p. ``move_prob`` to a uniform other
+        edge. A move that would empty the source cluster is skipped: an
+        edge with no attached devices has no model to gossip, and the
+        operator algebra (and the paper's B_t) assume nonempty clusters."""
+        m = self.fl.num_clusters
+        if self.sc.move_prob <= 0.0 or m < 2:
+            return
+        labels = self.labels.copy()
+        movers = np.nonzero(self.rng.random(labels.shape[0])
+                            < self.sc.move_prob)[0]
+        sizes = np.bincount(labels, minlength=m)
+        for k in movers:
+            if sizes[labels[k]] <= 1:
+                continue
+            dst = int(self.rng.integers(0, m - 1))
+            if dst >= labels[k]:
+                dst += 1
+            sizes[labels[k]] -= 1
+            sizes[dst] += 1
+            labels[k] = dst
+        self.labels = labels
+
+    def _draw_mask(self) -> np.ndarray:
+        """⌈fraction·n⌉ devices sampled uniformly, thinned by straggler
+        dropout; re-drawn until at least one device survives."""
+        n = self.fl.n
+        k = max(1, int(np.ceil(self.sc.sample_fraction * n)))
+        for _ in range(100):
+            mask = np.zeros(n)
+            cohort = self.rng.choice(n, size=k, replace=False)
+            kept = cohort[self.rng.random(k) >= self.sc.dropout_prob]
+            mask[kept] = 1.0
+            if mask.sum() > 0:
+                return mask
+        mask = np.zeros(n)
+        mask[cohort[0]] = 1.0  # pathological dropout: keep one device
+        return mask
+
+    def step(self) -> RoundPlan:
+        """Advance one global round: mobility, then sampling, then the
+        induced (W_intra, W_inter)."""
+        self._step_mobility()
+        mask = self._draw_mask()
+        W_intra, W_inter = make_masked_w(self.fl, self.labels, mask, self.H)
+        plan = RoundPlan(self.round_index, self.fl.num_clusters,
+                         self.labels.copy(), mask, W_intra, W_inter)
+        self.round_index += 1
+        return plan
+
+    def active_speeds(self, plan: RoundPlan) -> np.ndarray:
+        """Speed multipliers of the plan's participating devices."""
+        return self.speed_multipliers[plan.active]
+
+
+# ---------------------------------------------------------------------------
+# named presets (the scenarios the benchmarks and CLI expose)
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, ScenarioConfig] = {
+    "homogeneous": ScenarioConfig(name="homogeneous"),
+    "uniform": ScenarioConfig(
+        name="uniform", speed_dist="uniform", speed_spread=0.5),
+    "lognormal": ScenarioConfig(
+        name="lognormal", speed_dist="lognormal", speed_spread=0.6),
+    "bimodal": ScenarioConfig(
+        name="bimodal", speed_dist="bimodal", slow_fraction=0.25,
+        slow_factor=0.2),
+    "sampled": ScenarioConfig(
+        name="sampled", sample_fraction=0.5, dropout_prob=0.1),
+    "mobility": ScenarioConfig(
+        name="mobility", speed_dist="lognormal", speed_spread=0.6,
+        move_prob=0.25),
+    "mobile_sampled": ScenarioConfig(
+        name="mobile_sampled", speed_dist="lognormal", speed_spread=0.6,
+        sample_fraction=0.8, dropout_prob=0.05, move_prob=0.25),
+}
+
+
+def get_scenario(name: str) -> ScenarioConfig:
+    """Look up a named preset (see :data:`SCENARIOS`)."""
+    if name not in SCENARIOS:
+        raise ValueError(
+            f"unknown scenario {name!r}; choose from {sorted(SCENARIOS)}")
+    return SCENARIOS[name]

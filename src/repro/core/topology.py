@@ -17,6 +17,7 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 def ring(m: int) -> np.ndarray:
+    """Ring backhaul graph on m edge servers (paper §6.1 default)."""
     adj = np.zeros((m, m), bool)
     for i in range(m):
         adj[i, (i + 1) % m] = adj[(i + 1) % m, i] = True
@@ -26,18 +27,23 @@ def ring(m: int) -> np.ndarray:
 
 
 def complete(m: int) -> np.ndarray:
+    """Complete backhaul graph: one gossip step equals cloud averaging
+    (the §4.3 reduction CE-FedAvg → Hier-FAvg)."""
     adj = np.ones((m, m), bool)
     np.fill_diagonal(adj, False)
     return adj
 
 
 def star(m: int) -> np.ndarray:
+    """Star backhaul: server 0 is the hub (a cloud-like bottleneck that
+    still satisfies Assumption 4's connectivity)."""
     adj = np.zeros((m, m), bool)
     adj[0, 1:] = adj[1:, 0] = True
     return adj
 
 
 def torus(m: int) -> np.ndarray:
+    """2-D torus backhaul (degree-4 grid with wraparound), m = side²."""
     side = int(round(np.sqrt(m)))
     assert side * side == m, "torus requires a square number of nodes"
     adj = np.zeros((m, m), bool)
@@ -98,6 +104,8 @@ TOPOLOGIES = {
 
 
 def build_adjacency(name: str, m: int, cfg=None) -> np.ndarray:
+    """Backhaul adjacency by name (ring/complete/star/torus/erdos_renyi),
+    asserted connected so Assumption 4's spectral gap exists."""
     if name not in TOPOLOGIES:
         raise ValueError(f"unknown topology {name!r}")
     adj = TOPOLOGIES[name](m, cfg)
@@ -138,11 +146,13 @@ def zeta(H: np.ndarray) -> float:
 
 
 def omega1(z: float, pi: int) -> float:
+    """ω₁(ζ, π) of Theorem 1 (eq. 23): inter-cluster divergence factor."""
     zp = z ** (2 * pi)
     return zp / (1.0 - zp) if zp < 1 else np.inf
 
 
 def omega2(z: float, pi: int) -> float:
+    """ω₂(ζ, π) of Theorem 1 (eq. 23): gossip-error amplification factor."""
     zp = z ** pi
     if zp >= 1:
         return np.inf
@@ -179,3 +189,100 @@ def inter_cluster_operator(cluster_sizes, H: np.ndarray,
     c = 1.0 / np.asarray(cluster_sizes, float)
     Hp = np.linalg.matrix_power(H, pi)
     return B.T @ np.diag(c) @ Hp @ B
+
+
+# ---------------------------------------------------------------------------
+# generalized operators: unequal / time-varying clusters + participation
+# (the scenario engine, core/scenario.py, builds these per global round)
+# ---------------------------------------------------------------------------
+
+def assignment_matrix(labels, m: int) -> np.ndarray:
+    """B_t ∈ {0,1}^{m×n} from per-device cluster labels.
+
+    Generalizes :func:`cluster_assignment` to arbitrary (non-contiguous,
+    unequal, possibly time-varying) membership — mobility re-draws
+    ``labels`` between global rounds."""
+    labels = np.asarray(labels, int)
+    assert labels.ndim == 1 and (0 <= labels).all() and (labels < m).all()
+    B = np.zeros((m, labels.shape[0]))
+    B[labels, np.arange(labels.shape[0])] = 1.0
+    return B
+
+
+def masked_cluster_average(B: np.ndarray,
+                           mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """P ∈ R^{m×n}: row i averages uniformly over the *participating*
+    members of cluster i (the renormalized diag(c)·B of eq. 11).
+
+    A cluster whose members all sat the round out falls back to the plain
+    member average (its devices did not train, so this is their shared
+    edge model); a cluster with no members at all gets a zero row."""
+    m, n = B.shape
+    w = B if mask is None else B * np.asarray(mask, float)[None, :]
+    counts = w.sum(1)
+    sizes = B.sum(1)
+    P = np.zeros_like(B)
+    for i in range(m):
+        if counts[i] > 0:
+            P[i] = w[i] / counts[i]
+        elif sizes[i] > 0:
+            P[i] = B[i] / sizes[i]
+    return P
+
+
+def masked_intra_operator(B: np.ndarray,
+                          mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """V_t = B^T P — intra-cluster averaging over participating devices.
+
+    Every member (participating or not) is synced to its cluster's
+    participant average, mirroring the edge pushing y_{t} down to all
+    attached devices at the aggregation boundary (Algorithm 1 line 12).
+    With ``mask`` all-ones this is exactly
+    :func:`intra_cluster_operator` for the same membership."""
+    return B.T @ masked_cluster_average(B, mask)
+
+
+def masked_inter_operator(B: np.ndarray, H: np.ndarray, pi: int,
+                          mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """B^T H^π P — the row-stochastic generalization of eq. 11's
+    B^T diag(c) H^π B to unequal clusters and partial participation.
+
+    For equal cluster sizes diag(c) = (1/s)·I commutes with H^π, so this
+    coincides exactly with :func:`inter_cluster_operator`; for unequal
+    sizes the paper's written order is no longer stochastic (its rows sum
+    to c_i Σ_j H^π[i,j]·n_j ≠ 1) while this one always averages each
+    cluster before gossiping. Rows are renormalized so empty clusters
+    (zero rows of P) shed their weight onto the remaining clusters."""
+    P = masked_cluster_average(B, mask)
+    W = B.T @ np.linalg.matrix_power(H, pi) @ P
+    s = W.sum(1, keepdims=True)
+    # every device's own cluster is nonempty and H has positive diagonal,
+    # so each row keeps positive mass even if other clusters are empty
+    assert (s > 1e-12).all(), "device row lost all mass (empty own cluster?)"
+    return W / s
+
+
+def masked_global_average(n: int,
+                          mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """A_t: every device receives the mean over participating devices —
+    cloud aggregation (FedAvg / Hier-FAvg) over the sampled cohort.
+    Uniform over all devices when the mask is empty or absent."""
+    if mask is None or np.asarray(mask, float).sum() == 0:
+        return np.ones((n, n)) / n
+    mask = np.asarray(mask, float)
+    return np.tile(mask / mask.sum(), (n, 1))
+
+
+def renormalize_rows(W: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Restrict W's columns to participating devices and renormalize each
+    row; rows left with no support become identity (the device keeps its
+    model). Used to mask decentralized gossip (dec_local_sgd), where each
+    device is its own edge and an offline device neither sends nor
+    receives."""
+    mask = np.asarray(mask, float)
+    Wm = W * mask[None, :]
+    out = np.eye(W.shape[0])
+    s = Wm.sum(1)
+    ok = (s > 1e-12) & (mask > 0)   # offline rows stay identity too
+    out[ok] = Wm[ok] / s[ok, None]
+    return out

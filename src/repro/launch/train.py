@@ -80,15 +80,13 @@ def main(argv=None):
         step = jnp.zeros((), jnp.int32)
         for r in range(args.rounds):
             t0 = time.time()
-            nb = stream.next_batch((args.batch, args.seq))
-            # (R,B,S) -> (q,tau,R,B,S): fresh microbatch every local step
-            batch = {}
-            for k, v in nb.items():
-                tiled = np.stack([np.stack([v] * exp.fl.tau)] * exp.fl.q)
-                rng = np.random.default_rng(r)
-                batch[k] = jnp.asarray(
-                    (tiled + rng.integers(0, 1, tiled.shape)) %
-                    max(cfg.vocab_size, 1) if k == "tokens" else tiled)
+            # draw q·tau genuinely distinct microbatches from the stream:
+            # (R, q*tau, B, S) -> (q, tau, R, B, S), one per local step
+            qt = exp.fl.q * exp.fl.tau
+            nb = stream.next_batch((qt, args.batch, args.seq))
+            batch = {k: jnp.asarray(np.moveaxis(v, 0, 1).reshape(
+                exp.fl.q, exp.fl.tau, R, args.batch, args.seq))
+                for k, v in nb.items()}
             if cfg.family == "encdec":
                 batch["frames"] = jnp.zeros(
                     (exp.fl.q, exp.fl.tau, R, args.batch, cfg.encoder_seq,

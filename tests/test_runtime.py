@@ -53,6 +53,61 @@ def test_straggler_max_rule():
         fast.round_time("ce_fedavg", 2, 2, 2)
 
 
+ALGOS = ("ce_fedavg", "hier_favg", "fedavg", "local_edge", "dec_local_sgd")
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_round_time_monotone_in_tau_q_pi(algo):
+    """Eq. (8) per algorithm: more local steps, more edge rounds or more
+    gossip steps never make a round faster."""
+    rt = _rt()
+    base = rt.round_time(algo, tau=2, q=4, pi=5)
+    assert rt.round_time(algo, tau=4, q=4, pi=5) > base       # tau: compute
+    assert rt.round_time(algo, tau=2, q=8, pi=5) > base       # q: compute+up
+    more_pi = rt.round_time(algo, tau=2, q=4, pi=10)
+    if algo in ("ce_fedavg", "dec_local_sgd"):                # pi: backhaul
+        assert more_pi > base
+    else:
+        assert more_pi == base  # pi only prices gossip algorithms
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_per_device_speeds_straggler_dominates(algo):
+    """The slowest device's compute term is exactly the max_k rule, for
+    every algorithm's comm structure."""
+    hw = HardwareProfile()
+    wl = WorkloadProfile(1_000_000, 1e9)
+    speeds = [1e12] * 7 + [1e10]
+    rt = RuntimeModel(hw, wl, device_speeds=speeds)
+    tau, q, pi = 2, 4, 3
+    expected = q * tau * wl.flops_per_step / min(speeds) \
+        + rt.comm_time(algo, q, pi)
+    assert rt.round_time(algo, tau, q, pi) == pytest.approx(expected)
+    # a per-call cohort that excludes the straggler is faster
+    assert rt.round_time(algo, tau, q, pi, speeds=[1e12] * 7) < \
+        rt.round_time(algo, tau, q, pi)
+
+
+def test_model_bits_follows_hardware_precision():
+    """Satellite fix: the payload W always reflects hw.bytes_per_param
+    (the old property hardcoded 8 bits and was silently ignored)."""
+    wl = WorkloadProfile(1_000_000, 1e9)
+    assert wl.model_bits(HardwareProfile()) == 1_000_000 * 4 * 8
+    assert wl.model_bits(HardwareProfile.tpu_v5e()) == 1_000_000 * 2 * 8
+    hw4, hw2 = HardwareProfile(), HardwareProfile.tpu_v5e()
+    t4 = RuntimeModel(hw4, wl).comm_time("fedavg", 1, 1)
+    assert t4 == pytest.approx(wl.model_bits(hw4) / hw4.b_d2c)
+    t2 = RuntimeModel(hw2, wl).comm_time("fedavg", 1, 1)
+    assert t2 == pytest.approx(wl.model_bits(hw2) / hw2.b_d2c)
+
+
+def test_convergence_bound_decreases_in_n():
+    base = dict(T=10000, eta=0.01, L=1.0, sigma2=1.0, eps2=1.0,
+                eps_i2=1.0, m=8, tau=2, q=8, z=0.8, pi=10)
+    bounds = [convergence_bound(n=n, **base) for n in (16, 64, 256, 1024)]
+    assert all(a > b for a, b in zip(bounds, bounds[1:])), bounds
+
+
 def test_theorem1_bound_effects():
     base = dict(T=10000, eta=0.01, L=1.0, sigma2=1.0, eps2=1.0,
                 eps_i2=1.0, n=64, m=8, tau=2, q=8, z=0.8, pi=10)

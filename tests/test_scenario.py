@@ -1,0 +1,278 @@
+"""Scenario engine: masked/unequal-cluster operators, mobility, sampling,
+and parity with the static equal-cluster schedule (ISSUE 2 acceptance)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, ScenarioConfig
+from repro.core import topology as topo
+from repro.core.cefedavg import FLSimulator, make_w_schedule
+from repro.core.scenario import (SCENARIOS, ScenarioEngine, get_scenario,
+                                 make_masked_w, sample_speed_multipliers)
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+ALGOS = ("ce_fedavg", "hier_favg", "fedavg", "local_edge")
+
+
+def _sim(fl, *, scenario=None, seed=0, lr=0.1):
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, data, lr=lr, batch_size=16, seed=seed,
+        scenario=scenario)
+
+
+# ---------------------------------------------------------------------------
+# operator parity: full participation + equal contiguous clusters must
+# reduce to the static make_w_schedule operators (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_masked_w_reduces_to_static_schedule(algo):
+    fl = FLConfig(algorithm=algo, num_clusters=4, devices_per_cluster=3,
+                  topology="ring", pi=3)
+    s = make_w_schedule(fl)
+    labels = np.repeat(np.arange(4), 3)
+    Wi, We = make_masked_w(fl, labels, np.ones(fl.n), s.H)
+    np.testing.assert_allclose(Wi, s.W_intra, atol=1e-12)
+    np.testing.assert_allclose(We, s.W_inter, atol=1e-12)
+
+
+def test_masked_w_reduces_to_static_dec_local_sgd():
+    fl = FLConfig(algorithm="dec_local_sgd", num_clusters=6,
+                  devices_per_cluster=1, topology="ring", pi=2)
+    s = make_w_schedule(fl)
+    Wi, We = make_masked_w(fl, np.arange(6), np.ones(6), s.H)
+    np.testing.assert_allclose(Wi, np.eye(6), atol=1e-12)
+    np.testing.assert_allclose(We, s.W_inter, atol=1e-12)
+
+
+@pytest.mark.parametrize("algo", ALGOS + ("dec_local_sgd",))
+def test_masked_w_row_stochastic_under_mask_and_unequal_clusters(algo):
+    if algo == "dec_local_sgd":
+        fl = FLConfig(algorithm=algo, num_clusters=6,
+                      devices_per_cluster=1, topology="ring", pi=2)
+        labels = np.arange(6)
+        mask = np.array([1, 0, 1, 1, 0, 1.0])
+    else:
+        fl = FLConfig(algorithm=algo, num_clusters=3,
+                      devices_per_cluster=2, topology="ring", pi=4)
+        labels = np.array([0, 0, 0, 1, 2, 2])   # unequal: sizes 3,1,2
+        mask = np.array([1, 0, 1, 1, 0, 1.0])
+    H = topo.mixing_matrix(topo.build_adjacency(fl.topology,
+                                                fl.num_clusters, fl))
+    for W in make_masked_w(fl, labels, mask, H):
+        np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9)
+        assert (W >= -1e-12).all()
+
+
+def test_masked_intra_averages_over_participants_only():
+    """Cluster {0,1} with device 1 offline: everyone syncs to device 0."""
+    B = topo.assignment_matrix([0, 0, 1, 1], 2)
+    V = topo.masked_intra_operator(B, np.array([1, 0, 1, 1.0]))
+    np.testing.assert_allclose(V[0], [1, 0, 0, 0], atol=1e-12)
+    np.testing.assert_allclose(V[1], [1, 0, 0, 0], atol=1e-12)
+    np.testing.assert_allclose(V[2], [0, 0, .5, .5], atol=1e-12)
+
+
+def test_masked_intra_empty_cohort_falls_back_to_member_average():
+    """A cluster whose devices all sat out keeps its plain edge average."""
+    B = topo.assignment_matrix([0, 0, 1, 1], 2)
+    V = topo.masked_intra_operator(B, np.array([0, 0, 1, 1.0]))
+    np.testing.assert_allclose(V[0], [.5, .5, 0, 0], atol=1e-12)
+
+
+def test_renormalize_rows_keeps_offline_devices_fixed():
+    H = topo.mixing_matrix(topo.ring(4))
+    W = topo.renormalize_rows(np.linalg.matrix_power(H, 3),
+                              np.array([1, 0, 1, 1.0]))
+    np.testing.assert_allclose(W[1], [0, 1, 0, 0], atol=1e-12)  # offline
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-9)
+    assert W[0, 1] == 0  # nobody receives from the offline device
+
+
+def test_unequal_inter_operator_is_stochastic_where_papers_isnt():
+    """For unequal clusters B^T diag(c) H^π B (eq. 11 verbatim) loses row
+    sums; the generalized B^T H^π P keeps them (docs/SCENARIOS.md)."""
+    H = topo.mixing_matrix(topo.ring(3))
+    B = topo.assignment_matrix([0, 0, 0, 1, 2, 2], 3)
+    sizes = np.array([3, 1, 2])
+    paper = B.T @ np.diag(1 / sizes) @ np.linalg.matrix_power(H, 2) @ B
+    ours = topo.masked_inter_operator(B, H, 2)
+    assert not np.allclose(paper.sum(1), 1.0)
+    np.testing.assert_allclose(ours.sum(1), 1.0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# engine: mobility, sampling, heterogeneity draws
+# ---------------------------------------------------------------------------
+
+def test_mobility_keeps_clusters_nonempty_and_moves_devices():
+    fl = FLConfig(num_clusters=4, devices_per_cluster=4, topology="ring")
+    eng = ScenarioEngine(ScenarioConfig(move_prob=0.5, seed=3), fl)
+    moved = False
+    prev = eng.labels.copy()
+    for _ in range(20):
+        plan = eng.step()
+        assert (plan.cluster_sizes > 0).all()
+        assert plan.cluster_sizes.sum() == fl.n
+        moved = moved or (plan.labels != prev).any()
+        prev = plan.labels.copy()
+    assert moved, "move_prob=0.5 over 20 rounds must move someone"
+
+
+def test_engine_deterministic_across_instances():
+    fl = FLConfig(num_clusters=4, devices_per_cluster=4, topology="ring")
+    sc = SCENARIOS["mobile_sampled"]
+    a, b = ScenarioEngine(sc, fl), ScenarioEngine(sc, fl)
+    np.testing.assert_allclose(a.speed_multipliers, b.speed_multipliers)
+    for _ in range(5):
+        pa, pb = a.step(), b.step()
+        np.testing.assert_array_equal(pa.labels, pb.labels)
+        np.testing.assert_array_equal(pa.mask, pb.mask)
+
+
+def test_sampling_cardinality_and_dropout():
+    fl = FLConfig(num_clusters=4, devices_per_cluster=4, topology="ring")
+    eng = ScenarioEngine(ScenarioConfig(sample_fraction=0.5, seed=0), fl)
+    for _ in range(10):
+        plan = eng.step()
+        assert plan.mask.sum() == 8   # ceil(0.5 * 16), no dropout
+    eng = ScenarioEngine(ScenarioConfig(sample_fraction=0.5,
+                                        dropout_prob=0.4, seed=0), fl)
+    sums = [eng.step().mask.sum() for _ in range(20)]
+    assert min(sums) >= 1 and max(sums) <= 8
+    assert any(s < 8 for s in sums), "dropout must thin some cohort"
+
+
+@pytest.mark.parametrize("dist,kw", [
+    ("uniform", dict(speed_spread=0.5)),
+    ("lognormal", dict(speed_spread=0.6)),
+    ("bimodal", dict(slow_fraction=0.5, slow_factor=0.1)),
+])
+def test_speed_distributions_positive_mean_near_one(dist, kw):
+    sc = ScenarioConfig(speed_dist=dist, **kw)
+    mult = sample_speed_multipliers(sc, 4096, np.random.default_rng(0))
+    assert (mult > 0).all()
+    assert 0.4 < mult.mean() < 1.2, mult.mean()
+
+
+def test_speed_homogeneous_is_ones():
+    mult = sample_speed_multipliers(ScenarioConfig(), 8,
+                                    np.random.default_rng(0))
+    np.testing.assert_allclose(mult, 1.0)
+
+
+def test_get_scenario():
+    assert get_scenario("mobility").move_prob > 0
+    with pytest.raises(ValueError):
+        get_scenario("nope")
+    for name, sc in SCENARIOS.items():
+        sc.validate()
+        assert sc.name == name
+
+
+def test_trivial_property():
+    assert ScenarioConfig().trivial
+    assert ScenarioConfig(speed_dist="lognormal", speed_spread=1.0).trivial
+    assert not ScenarioConfig(sample_fraction=0.5).trivial
+    assert not ScenarioConfig(move_prob=0.1).trivial
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity + learning under scenarios
+# ---------------------------------------------------------------------------
+
+def test_trivial_scenario_matches_no_scenario_exactly():
+    """sampling=1.0 + mobility off must reproduce the static-schedule
+    trajectory bit-for-bit (acceptance criterion)."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4, topology="ring")
+    s0 = _sim(fl)
+    s1 = _sim(fl, scenario=ScenarioConfig(speed_dist="lognormal",
+                                          speed_spread=0.6))
+    s0.run(3)
+    s1.run(3)
+    # identical jitted round + full mask; the only slack is the last-ulp
+    # matmul-association difference between the static and masked W builds
+    for a, b in zip(jax.tree.leaves(s0.params), jax.tree.leaves(s1.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_simulator_learns_under_sampling_and_mobility():
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4, topology="ring")
+    sc = ScenarioConfig(sample_fraction=0.75, dropout_prob=0.1,
+                        move_prob=0.3, seed=1)
+    s = _sim(fl, scenario=sc)
+    acc0, _ = s.evaluate()
+    hist = s.run(8)
+    assert hist["acc"][-1] > max(acc0 + 0.15, 0.5), (acc0, hist["acc"])
+
+
+def test_cluster_models_synced_after_round_under_mobility():
+    """Algorithm 1 line 12 still holds per-round under mobility: devices
+    sharing a cluster at round end share the edge model."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=1, q=1, pi=2, topology="ring")
+    s = _sim(fl, scenario=ScenarioConfig(move_prob=0.5, seed=2))
+    for _ in range(3):
+        s.step_round()
+    w = np.asarray(jax.tree.leaves(s.params)[0])
+    labels = s.labels
+    for c in np.unique(labels):
+        members = np.nonzero(labels == c)[0]
+        for k in members[1:]:
+            np.testing.assert_allclose(w[members[0]], w[k], atol=1e-5)
+
+
+def test_masked_operators_apply_rowwise_consensus_fixed_point():
+    """Row-stochastic masked operators must leave a consensus state
+    invariant. With lr=0 nothing trains, so every round is pure mixing:
+    params must stay at the shared init — under sampling AND mobility.
+    (Catches transposed application: column-applying the asymmetric
+    masked operators zeroes non-participants and rescales cohorts.)"""
+    for algo in ("ce_fedavg", "hier_favg", "fedavg", "local_edge"):
+        fl = FLConfig(algorithm=algo, num_clusters=4,
+                      devices_per_cluster=2, tau=1, q=2, pi=3,
+                      topology="ring")
+        sc = ScenarioConfig(sample_fraction=0.5, dropout_prob=0.2,
+                            move_prob=0.4, seed=3)
+        s = _sim(fl, scenario=sc, lr=0.0)
+        p0 = [np.asarray(x).copy() for x in jax.tree.leaves(s.params)]
+        for _ in range(4):
+            s.step_round()
+        for a, b in zip(jax.tree.leaves(s.params), p0):
+            np.testing.assert_allclose(np.asarray(a), b, atol=1e-5)
+
+
+def test_nonparticipants_receive_cohort_average():
+    """After a fedavg round with a partial cohort, EVERY device (sampled
+    or not) holds the cohort average — the masked A's rows are identical,
+    so all device models must coincide post-round."""
+    fl = FLConfig(algorithm="fedavg", num_clusters=2,
+                  devices_per_cluster=2, tau=1, q=1, topology="ring")
+    s = _sim(fl, scenario=ScenarioConfig(sample_fraction=0.5, seed=0))
+    s.step_round()
+    w = np.asarray(jax.tree.leaves(s.params)[0])
+    assert np.abs(w).max() > 0, "params must not be zeroed"
+    for k in range(1, fl.n):
+        np.testing.assert_allclose(w[0], w[k], atol=1e-5)
+
+
+def test_scenario_seed_controls_trajectory():
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=2,
+                  devices_per_cluster=2, tau=1, q=1, pi=2, topology="ring")
+    sc = dataclasses.replace(SCENARIOS["sampled"], seed=0)
+    h0 = _sim(fl, scenario=sc).run(2)
+    h1 = _sim(fl, scenario=dataclasses.replace(sc, seed=7)).run(2)
+    assert h0["acc"] != h1["acc"] or h0["loss"] != h1["loss"]
