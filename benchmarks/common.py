@@ -52,7 +52,8 @@ def make_data(fl: FLConfig, *, full: bool = False, cluster_iid=None,
 
 
 def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
-             seed: int = 0, scenario=None) -> FLSimulator:
+             seed: int = 0, scenario=None, bank: bool = True,
+             batch_size: int = 16) -> FLSimulator:
     if full:
         init = lambda k: init_femnist_cnn(k)            # noqa: E731
         apply = apply_femnist_cnn
@@ -60,8 +61,8 @@ def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
         init = lambda k: init_mlp_classifier(k, MLP_DIM, 32,  # noqa: E731
                                              MLP_CLASSES)
         apply = apply_mlp_classifier
-    return FLSimulator(init, apply, fl, data, lr=lr, batch_size=16,
-                       seed=seed, scenario=scenario)
+    return FLSimulator(init, apply, fl, data, lr=lr, batch_size=batch_size,
+                       seed=seed, scenario=scenario, bank=bank)
 
 
 def paper_runtime(fl: FLConfig, *, full: bool = False) -> RuntimeModel:
@@ -89,5 +90,26 @@ class Timer:
         self.dt = time.time() - self.t0
 
 
+# every row() call also lands here so `benchmarks.run --json` can emit the
+# machine-readable perf-trajectory records (BENCH_<tag>.json)
+RECORDS: list = []
+
+
 def row(name: str, us_per_call: float, derived: str):
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def reset_records():
+    RECORDS.clear()
+
+
+def dump_records(path: str) -> None:
+    """Write the collected rows as a JSON list of
+    ``{name, us_per_call, derived}`` records (the perf trajectory format
+    described in docs/PERFORMANCE.md)."""
+    import json
+    with open(path, "w") as f:
+        json.dump(RECORDS, f, indent=1)
+        f.write("\n")

@@ -130,13 +130,134 @@ def tab1(full=False):
     row("tab1_m1_equals_fedavg", 0.0, f"op_err={err2:.2e}")
 
 
-def kern(full=False):
+def kern_bank(full=False, smoke=False):
+    """ModelBank hot-path microbenchmarks (ISSUE 3 acceptance):
+
+    1. the fused flat qτ-boundary — ONE in-place streaming pass with the
+       precomputed W_inter·W_intra, exactly as the bank engine executes
+       it — vs the per-leaf ``mix()`` baseline exactly as the legacy
+       engine executes a global boundary: ``mix(W_intra, ·)`` inside the
+       q-scan then ``mix(W_inter, ·)`` outside it (scan-separated, so
+       XLA cannot fold the two passes; L tensordots + fresh output
+       allocations per pass), at n=16 on the FEMNIST CNN. Each path is
+       timed in its own tight best-of-reps loop (the standard kernel
+       protocol): the bank side threads its donated buffer exactly as
+       ``FLSimulator.step_round`` does, the legacy side re-calls on the
+       resident pytree exactly as the legacy ``step_round`` does;
+    2. cohort compaction — a 50%-participation scenario round vs a
+       full-participation round of the same bank engine, wall-timed (the
+       compacted round runs its gradient work on k_pad=8 rows, not 16).
+    """
+    from repro.core.cefedavg import make_w_schedule, mix
+    from repro.kernels.gossip_mix import FlatLayout, gossip_mix_rows
+    from repro.models.cnn import init_femnist_cnn, init_mlp_classifier
+    n = 16
+    fl = _fl(m=4, dpc=4)
+    sched = make_w_schedule(fl)
+    W_i = jnp.asarray(sched.W_intra, jnp.float32)
+    W_e = jnp.asarray(sched.W_inter, jnp.float32)
+    W_comb = jnp.asarray(sched.W_inter @ sched.W_intra, jnp.float32)
+    if smoke:
+        one = init_mlp_classifier(jax.random.PRNGKey(0), 64, 256, 32)
+    else:
+        one = init_femnist_cnn(jax.random.PRNGKey(0))
+    layout = FlatLayout.for_tree(one)
+    params = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), one)
+    params = jax.tree.map(
+        lambda l: l * jax.random.normal(jax.random.PRNGKey(1),
+                                        (n,) + (1,) * (l.ndim - 1)), params)
+    Y = layout.flatten_stack(params)
+    T = layout.total
+    tag = "femnist_cnn" if not smoke else "mlp_smoke"
+
+    import functools
+    import time as _time
+
+    @jax.jit
+    def f_leaf(p):
+        # the legacy engine's qτ boundary: intra mix as the last op of
+        # the scanned edge round, inter mix after the scan (the legacy
+        # round does not donate — old and new params coexist)
+        p, _ = jax.lax.scan(lambda c, _: (mix(W_i, c), None), p,
+                            jnp.arange(1))
+        return mix(W_e, p)
+
+    # the bank engine's qτ boundary: one in-place pass on the donated
+    # bank, each call consuming the previous round's buffer — timed by
+    # threading the buffer exactly as FLSimulator.step_round does
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def f_flat(Y):
+        return gossip_mix_rows(W_comb, Y)
+
+    reps = 2 if smoke else 7
+    jax.block_until_ready(f_leaf(params))
+    jax.block_until_ready(f_leaf(params))
+    t_leaf = t_flat = float("inf")
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(f_leaf(params))
+        t_leaf = min(t_leaf, _time.perf_counter() - t0)
+    Yc = f_flat(Y)
+    jax.block_until_ready(Yc)
+    Yc = f_flat(Yc)
+    jax.block_until_ready(Yc)
+    for _ in range(reps):
+        t0 = _time.perf_counter()
+        Yc = f_flat(Yc)
+        jax.block_until_ready(Yc)
+        t_flat = min(t_flat, _time.perf_counter() - t0)
+    speedup = t_leaf / t_flat
+    row(f"kern_boundary_perleaf_{tag}_n{n}", t_leaf * 1e6,
+        f"legacy qt-boundary;2 per-leaf passes;L={len(layout.sizes)};T={T}")
+    row(f"kern_boundary_fused_{tag}_n{n}", t_flat * 1e6,
+        f"bank qt-boundary;1 fused pass;speedup_vs_perleaf={speedup:.2f}x")
+    if not smoke:
+        assert speedup >= 2.0, (
+            f"fused boundary must be >=2x the per-leaf baseline, got "
+            f"{speedup:.2f}x")
+
+    # -- cohort compaction: 50% participation vs full, wall-timed --------
+    from repro.config import ScenarioConfig
+    rounds = 1 if smoke else 2
+    times = {}
+    for frac in (1.0, 0.5):
+        flc = _fl(m=4, dpc=4, tau=1, q=1, pi=2)
+        sc = (None if frac >= 1.0 else
+              ScenarioConfig(name="bench", sample_fraction=frac, seed=0))
+        sim = make_sim(flc, make_data(flc, full=not smoke),
+                       full=not smoke, scenario=sc, batch_size=16)
+        sim.step_round()                       # compile + first buckets
+        jax.block_until_ready(sim.bank.params)
+        with Timer() as t:
+            for _ in range(rounds):
+                sim.step_round()
+            jax.block_until_ready(sim.bank.params)
+        times[frac] = t.dt / rounds
+        label = "full" if frac >= 1.0 else "half"
+        extra = (f"cohort_bucket={sim.last_bucket}" if frac < 1.0
+                 else f"n={flc.n}")
+        row(f"kern_round_{label}_participation_{tag}", times[frac] * 1e6,
+            f"bank_engine;{extra}")
+    ratio = times[0.5] / times[1.0]
+    row(f"kern_compaction_ratio_{tag}", 0.0,
+        f"half/full_round_time={ratio:.2f};gradient work scales with "
+        f"cohort (<1.0 means compaction pays)")
+    if not smoke:
+        assert ratio < 0.85, (
+            f"50% cohort must do measurably less work, ratio={ratio:.2f}")
+
+
+def kern(full=False, smoke=False):
     """Kernel-path microbenchmarks (XLA reference path on this host; the
     Pallas kernels target TPU and are validated interpret-mode in tests)."""
     import time
     from repro.models.layers import attention_core
     from repro.models.ssm import ssd_chunked
     from repro.core.cefedavg import mix
+    kern_bank(full=full, smoke=smoke)
+    if smoke:
+        return
     k = jax.random.PRNGKey(0)
     q = jax.random.normal(k, (1, 1024, 8, 64), jnp.float32)
     f = jax.jit(lambda q: attention_core(q, q, q, causal=True))
@@ -190,15 +311,34 @@ BENCHES = {"fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
 
 
 def main() -> None:
+    import inspect
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="run the real FEMNIST CNN (slow on CPU)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="also write the rows as BENCH_<tag>.json records "
+                         "({name, us_per_call, derived}; the perf "
+                         "trajectory format, docs/PERFORMANCE.md)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI perf-smoke mode: tiny shapes, no asserts on "
+                         "ratios, kernels in interpret-safe sizes")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
+    from benchmarks.common import dump_records, reset_records
+    reset_records()
     print("name,us_per_call,derived")
-    for n in names:
-        BENCHES[n](full=args.full)
+    try:
+        for n in names:
+            fn = BENCHES[n]
+            kw = {"full": args.full}
+            if "smoke" in inspect.signature(fn).parameters:
+                kw["smoke"] = args.smoke
+            fn(**kw)
+    finally:
+        # a failed perf assert must not discard the rows already timed
+        if args.json:
+            dump_records(args.json)
 
 
 if __name__ == '__main__':

@@ -12,6 +12,8 @@ from repro.core.topology import (  # noqa: F401
     masked_inter_operator,
 )
 from repro.core.cefedavg import FLSimulator, make_w_schedule  # noqa: F401
+from repro.core.modelbank import (ModelBank, cohort_buckets,  # noqa: F401
+                                  compact_plan)
 from repro.core.gossip import GossipSchedule  # noqa: F401
 from repro.core.runtime import (RuntimeModel, HardwareProfile,  # noqa: F401
                                 gossip_traffic_per_round)

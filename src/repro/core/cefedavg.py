@@ -4,12 +4,30 @@ The paper's update rule (eq. 10):  X_{t+1} = (X_t − η G_t) W_t, with
 W_t ∈ {I, V, B^T diag(c) H^π B} depending on the iteration (eq. 11).
 ``make_w_schedule`` builds those operators for CE-FedAvg and for every
 baseline (Table 1 / §4.3 special cases); ``FLSimulator`` runs the literal
-matrix form with all n device models materialized (vmap) — the
-paper-faithful engine used for the Figure 2–6 reproductions and for
-unit-testing the sharded production trainer against.
+matrix form with all n device models materialized — the paper-faithful
+engine used for the Figure 2–6 reproductions and for unit-testing the
+sharded production trainer against.
+
+Two interchangeable engines live behind the same ``FLSimulator`` API:
+
+- **ModelBank (default, ``bank=True``)** — params, momentum and the
+  error-feedback residual are single contiguous ``(n, T)`` float32
+  buffers (``core/modelbank.py``); pytree views exist only inside the
+  per-device ``apply_fn`` and at eval/checkpoint edges. Every mixing
+  boundary is ONE streaming pass of the fused gossip kernel
+  (``kernels/gossip_mix.gossip_mix_rows``), the coincident τ/qτ boundary
+  is folded into a single pass with the precomputed operator
+  ``W_inter @ W_intra``, the jitted round donates its buffers (peak
+  memory ~1× the bank), and scenario rounds with partial participation
+  run their gradient work on a compacted ``(k_pad, T)`` cohort gather
+  (static bucketed sizes, ``modelbank.cohort_buckets``).
+- **legacy pytree (``bank=False``)** — per-leaf ``tensordot`` mixing and
+  full-n ``where``-frozen local steps; kept as the bit-faithful parity
+  reference (``tests/test_modelbank.py``).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
@@ -19,6 +37,8 @@ import numpy as np
 
 from repro.config import FLConfig
 from repro.core import topology as topo
+from repro.core.modelbank import ModelBank, cohort_buckets, compact_plan
+from repro.kernels.gossip_mix import gossip_mix_rows
 
 
 @dataclass
@@ -102,12 +122,16 @@ class FLSimulator:
     scenario: optional config.ScenarioConfig — per-round client sampling,
           straggler dropout and device mobility (core/scenario.py); pair
           with core.clock.run_wall_clock for time-to-accuracy curves.
+    bank: True (default) runs the flat ModelBank engine; False the legacy
+          per-leaf pytree engine (parity/debug escape hatch). ``params``,
+          ``mom`` and ``residual`` read/write as pytrees in both modes.
     """
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl: FLConfig,
                  data: Dict[str, Any], *, lr: float = 0.05,
                  momentum: float = 0.9, batch_size: int = 50, seed: int = 0,
-                 compression=None, dp=None, scenario=None):
+                 compression=None, dp=None, scenario=None,
+                 bank: bool = True):
         self.fl = fl
         self.apply_fn = apply_fn
         self.sched = make_w_schedule(fl)
@@ -129,19 +153,83 @@ class FLSimulator:
                                 fl.devices_per_cluster)
         self._W_intra_j = jnp.asarray(self.sched.W_intra, jnp.float32)
         self._W_inter_j = jnp.asarray(self.sched.W_inter, jnp.float32)
+        # the coincident τ/qτ boundary folded into one operator — the
+        # fused single-pass form the ModelBank engine applies
+        self._W_comb_j = jnp.asarray(
+            self.sched.W_inter @ self.sched.W_intra, jnp.float32)
         self._full_mask = jnp.ones((n,), jnp.float32)
+        with_residual = (compression is not None
+                         and compression.error_feedback)
         # Algorithm 1 initializes every device from its edge model y_{0,0};
         # we use one shared init (common FL practice), so params are
         # cluster-uniform from the start.
         one = init_fn(jax.random.PRNGKey(seed))
-        self.params = jax.tree.map(
-            lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), one)
-        self.mom = jax.tree.map(jnp.zeros_like, self.params)
-        self.residual = (jax.tree.map(jnp.zeros_like, self.params)
-                         if compression is not None and
-                         compression.error_feedback else None)
+        self.bank: Optional[ModelBank] = None
+        if bank:
+            self.bank = ModelBank.from_model(one, n,
+                                             with_residual=with_residual)
+            self._buckets = cohort_buckets(n)
+            self._round_flat = self._build_round_flat()
+            self._round_compact = self._build_round_compact()
+        else:
+            self._params = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), one)
+            self._mom = jax.tree.map(jnp.zeros_like, self._params)
+            self._residual = (jax.tree.map(jnp.zeros_like, self._params)
+                              if with_residual else None)
+            self._round = self._build_round()
+        self.last_bucket = n   # cohort capacity used by the latest round
         self.key = jax.random.PRNGKey(seed + 1)
-        self._round = self._build_round()
+        self._eval_fn = self._build_eval()
+
+    # -- state as pytrees (both engines) ------------------------------------
+    @property
+    def params(self):
+        """Device-stacked model pytree; in bank mode a materialized view
+        of the flat (n, T) buffer (fresh arrays, safe across rounds)."""
+        if self.bank is not None:
+            return self.bank.params_tree()
+        return self._params
+
+    @params.setter
+    def params(self, tree):
+        if self.bank is not None:
+            self.bank.params = self.bank.layout.flatten_stack(tree)
+        else:
+            self._params = tree
+
+    @property
+    def mom(self):
+        """Device-stacked momentum pytree (see ``params``)."""
+        if self.bank is not None:
+            return self.bank.layout.unflatten_stack(self.bank.mom)
+        return self._mom
+
+    @mom.setter
+    def mom(self, tree):
+        if self.bank is not None:
+            self.bank.mom = self.bank.layout.flatten_stack(tree)
+        else:
+            self._mom = tree
+
+    @property
+    def residual(self):
+        """Error-feedback residual pytree, or None when compression with
+        error feedback is off."""
+        if self.bank is not None:
+            if self.bank.residual is None:
+                return None
+            return self.bank.layout.unflatten_stack(self.bank.residual)
+        return self._residual
+
+    @residual.setter
+    def residual(self, tree):
+        if self.bank is not None:
+            self.bank.residual = (
+                None if tree is None
+                else self.bank.layout.flatten_stack(tree))
+        else:
+            self._residual = tree
 
     # -- loss --------------------------------------------------------------
     def _loss(self, p, x, y):
@@ -150,15 +238,16 @@ class FLSimulator:
         picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
         return jnp.mean(lse - picked)
 
-    # -- one global round, jitted ------------------------------------------
+    # -- one global round, jitted (legacy pytree engine) --------------------
     def _build_round(self):
-        """The jitted global round. W_intra/W_inter/mask are *arguments*
-        (not closure constants) so the scenario engine can re-draw them
-        between rounds without recompiling: masked devices take no local
-        steps (their params and momentum are frozen via ``where``) and the
-        operators are whatever (possibly unequal/masked) matrices the
-        caller passes — the static schedule with a full mask reproduces
-        the original fixed-schedule round bit-for-bit."""
+        """The legacy jitted global round. W_intra/W_inter/mask are
+        *arguments* (not closure constants) so the scenario engine can
+        re-draw them between rounds without recompiling: masked devices
+        take no local steps (their params and momentum are frozen via
+        ``where``) and the operators are whatever (possibly
+        unequal/masked) matrices the caller passes — the static schedule
+        with a full mask reproduces the original fixed-schedule round
+        bit-for-bit."""
         fl = self.fl
         n = self.sched.n
         N = self.data["xs"].shape[1]
@@ -237,6 +326,142 @@ class FLSimulator:
 
         return global_round
 
+    # -- one global round, jitted (flat ModelBank engine) -------------------
+    def _flat_helpers(self):
+        """Local-step factory shared by the flat rounds; the per-row grad
+        closure materializes pytree views only inside the apply call."""
+        n = self.sched.n
+        N = self.data["xs"].shape[1]
+        layout = self.bank.layout
+
+        def loss_row(row, x, y):
+            return self._loss(layout.unflatten_one(row), x, y)
+        grad_row = jax.grad(loss_row)
+
+        def make_local_step(xs, ys, act2d, gather=None):
+            """One SGD+momentum step on a (rows, T) slab. ``gather``
+            (compaction) maps the full-n batch-index draw onto the slab's
+            rows so the cohort sees the same batches as the full path."""
+            def local_step(carry, key):
+                Y, M = carry
+                idx = jax.random.randint(key, (n, self.batch), 0, N)
+                if gather is not None:
+                    idx = idx[gather]
+                xb = jax.vmap(lambda x, i: x[i])(xs, idx)
+                yb = jax.vmap(lambda y, i: y[i])(ys, idx)
+                G = jax.vmap(grad_row)(Y, xb, yb)
+                M = jnp.where(act2d, self.momentum * M + G, M)
+                Y = jnp.where(act2d, Y - self.lr * M, Y)
+                return (Y, M), None
+            return local_step
+
+        return make_local_step
+
+    def _build_round_flat(self):
+        """The flat global round: all state stays (n, T); each mixing
+        boundary is one streaming pass (``gossip_mix_rows``); the final
+        τ-boundary, which coincides with the qτ-boundary, is fused into
+        a single pass with the precomputed ``W_final = W_inter @ W_intra``
+        (the caller passes plain ``W_inter`` on the delta/upload path,
+        where the two applications cannot be folded). Buffers are donated
+        so peak memory stays ~1× the bank."""
+        fl = self.fl
+        n = self.sched.n
+        comp, dp = self.compression, self.dp
+        plain = comp is None and dp is None
+        xs, ys = self.data["xs"], self.data["ys"]
+        make_local_step = self._flat_helpers()
+        segments = self.bank.layout.segments
+
+        def train_tau(Y, M, key, act2d):
+            local_step = make_local_step(xs, ys, act2d)
+            keys = jax.random.split(key, fl.tau)
+            (Y, M), _ = jax.lax.scan(local_step, (Y, M), keys)
+            return Y, M
+
+        def upload(delta, R, key):
+            """Flat-domain device uploads: DP then compression, row-wise
+            (same per-device/per-leaf key schedule as the pytree path)."""
+            if dp is not None and dp.enabled:
+                from repro.core.privacy import privatize_update_flat
+                keys = jax.random.split(key, n)
+                delta = jax.vmap(
+                    lambda d, k: privatize_update_flat(d, dp, k))(
+                        delta, keys)
+            if comp is not None and comp.kind != "none":
+                from repro.core.compress import compress_flat
+                keys = jax.random.split(jax.random.fold_in(key, 1), n)
+                delta, R = jax.vmap(
+                    lambda d, r, k: compress_flat(comp, d, r, k, segments)
+                )(delta, R, keys)
+            return delta, R
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+        def global_round(Y, M, R, key, W_intra, W_final, mask):
+            act2d = (mask > 0.5)[:, None]
+            keys = jax.random.split(key, fl.q)
+            if plain:
+                def body(carry, k1):
+                    Y, M, R = carry
+                    Y, M = train_tau(Y, M, k1, act2d)
+                    Y = gossip_mix_rows(W_intra, Y)
+                    return (Y, M, R), None
+                if fl.q > 1:
+                    (Y, M, R), _ = jax.lax.scan(body, (Y, M, R),
+                                                keys[:-1])
+                Y, M = train_tau(Y, M, keys[-1], act2d)
+                Y = gossip_mix_rows(W_final, Y)   # fused τ∘qτ boundary
+                return Y, M, R
+
+            def body(carry, k1):
+                Y0, M, R = carry
+                Y, M = train_tau(Y0, M, k1, act2d)
+                delta = Y - Y0
+                delta, R = upload(delta, R, jax.random.fold_in(k1, 7))
+                Y = Y0 + gossip_mix_rows(W_intra, delta)
+                return (Y, M, R), None
+            (Y, M, R), _ = jax.lax.scan(body, (Y, M, R), keys)
+            Y = gossip_mix_rows(W_final, Y)       # W_inter on this path
+            return Y, M, R
+
+        return global_round
+
+    def _build_round_compact(self):
+        """The compacted scenario round: gradient/momentum work runs on a
+        dense (k_pad, T) gather of the participating rows (``idx`` holds
+        distinct rows — cohort first, inert padding after — so the
+        scatter back is deterministic); mixing boundaries still stream
+        the full bank, since masked operators move every device's row.
+        Traced once per cohort bucket (static shapes under jit)."""
+        fl = self.fl
+        xs, ys = self.data["xs"], self.data["ys"]
+        make_local_step = self._flat_helpers()
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def compact_round(Y, M, key, idx, lane, W_intra, W_comb):
+            lane2d = lane[:, None]
+            xs_c, ys_c = xs[idx], ys[idx]
+            local_step = make_local_step(xs_c, ys_c, lane2d, gather=idx)
+
+            def train_edge(carry, k1):
+                Y, M = carry
+                P, Mc = Y[idx], M[idx]
+                keys = jax.random.split(k1, fl.tau)
+                (P, Mc), _ = jax.lax.scan(local_step, (P, Mc), keys)
+                return Y.at[idx].set(P), M.at[idx].set(Mc)
+
+            keys = jax.random.split(key, fl.q)
+            if fl.q > 1:
+                def body(carry, k1):
+                    Y, M = train_edge(carry, k1)
+                    return (gossip_mix_rows(W_intra, Y), M), None
+                (Y, M), _ = jax.lax.scan(body, (Y, M), keys[:-1])
+            Y, M = train_edge((Y, M), keys[-1])
+            Y = gossip_mix_rows(W_comb, Y)        # fused τ∘qτ boundary
+            return Y, M
+
+        return compact_round
+
     # -- driver -------------------------------------------------------------
     def step_round(self):
         """Advance ONE global round.
@@ -244,23 +469,50 @@ class FLSimulator:
         With a scenario attached, first realizes this round's plan
         (mobility re-draws B_t, sampling draws the cohort) and feeds the
         induced masked operators to the jitted round; otherwise replays
-        the static schedule with full participation. Returns the
-        ``RoundPlan`` (or None without a scenario) so callers — e.g. the
-        wall-clock harness in core/clock.py — can charge the cohort."""
+        the static schedule with full participation. In bank mode a
+        partial cohort dispatches to the compacted round (``last_bucket``
+        records the capacity used). Returns the ``RoundPlan`` (or None
+        without a scenario) so callers — e.g. the wall-clock harness in
+        core/clock.py — can charge the cohort."""
         if self.engine is not None:
             plan = self.engine.step()
             self.labels = plan.labels
             W_intra = jnp.asarray(plan.W_intra, jnp.float32)
             W_inter = jnp.asarray(plan.W_inter, jnp.float32)
-            mask = jnp.asarray(plan.mask, jnp.float32)
+            mask_np = plan.mask
         else:
             plan = None
             W_intra, W_inter = self._W_intra_j, self._W_inter_j
-            mask = self._full_mask
+            mask_np = None
         self.key, k = jax.random.split(self.key)
-        self.params, self.mom, self.residual = self._round(
-            self.params, self.mom, self.residual, k, W_intra, W_inter,
-            mask)
+        if self.bank is None:
+            mask = (jnp.asarray(mask_np, jnp.float32)
+                    if mask_np is not None else self._full_mask)
+            self._params, self._mom, self._residual = self._round(
+                self._params, self._mom, self._residual, k, W_intra,
+                W_inter, mask)
+            return plan
+        b = self.bank
+        plain = self.compression is None and self.dp is None
+        k_active = b.n if mask_np is None else int(mask_np.sum())
+        if plain and k_active < b.n:
+            cp = compact_plan(mask_np, self._buckets)
+            self.last_bucket = cp.k_pad
+            W_comb = jnp.asarray(plan.W_inter @ plan.W_intra, jnp.float32)
+            b.params, b.mom = self._round_compact(
+                b.params, b.mom, k, jnp.asarray(cp.idx),
+                jnp.asarray(cp.lane), W_intra, W_comb)
+            return plan
+        self.last_bucket = b.n
+        if plan is None:
+            W_final = self._W_comb_j if plain else self._W_inter_j
+            mask = self._full_mask
+        else:
+            W_final = (jnp.asarray(plan.W_inter @ plan.W_intra, jnp.float32)
+                       if plain else W_inter)
+            mask = jnp.asarray(mask_np, jnp.float32)
+        b.params, b.mom, b.residual = self._round_flat(
+            b.params, b.mom, b.residual, k, W_intra, W_final, mask)
         return plan
 
     def run(self, rounds: int, eval_every: int = 1,
@@ -278,26 +530,40 @@ class FLSimulator:
     def edge_models(self):
         """Cluster-averaged (edge) models y_t — what the paper evaluates.
         Uses the CURRENT assignment B_t (mobility moves devices between
-        clusters, so membership is re-read every call)."""
+        clusters, so membership is re-read every call). In bank mode the
+        (m, n) projection streams the flat bank once."""
         B = topo.assignment_matrix(self.labels, self.fl.num_clusters)
+        P = topo.masked_cluster_average(B)
+        if self.bank is not None:
+            return self.bank.project(P)
         # mix() row-applies, so a rectangular (m, n) averaging operator
         # maps the n device models straight to the m edge models
-        return mix(topo.masked_cluster_average(B), self.params)
+        return mix(P, self._params)
 
     def global_model(self):
-        return jax.tree.map(lambda l: jnp.mean(l, 0), self.params)
+        """Device-average model x̄ as a single pytree."""
+        if self.bank is not None:
+            return self.bank.mean_model()
+        return jax.tree.map(lambda l: jnp.mean(l, 0), self._params)
+
+    def _build_eval(self):
+        """One jitted eval closure for the simulator's lifetime; jit's
+        shape cache makes each distinct (m, eval_batch) trace once
+        instead of re-tracing the vmapped closure per ``evaluate`` call."""
+        def eval_impl(em, tx, ty):
+            def one(p):
+                logits = self.apply_fn(p, tx)
+                acc = jnp.mean(
+                    (jnp.argmax(logits, -1) == ty).astype(jnp.float32))
+                return acc, self._loss(p, tx, ty)
+            accs, losses = jax.vmap(one)(em)
+            return jnp.mean(accs), jnp.mean(losses)
+        return jax.jit(eval_impl)
 
     def evaluate(self, eval_batch: int = 512):
         """Mean test accuracy of the m edge models on the common test set."""
         em = self.edge_models()
         tx = self.data["test_x"][:eval_batch]
         ty = self.data["test_y"][:eval_batch]
-
-        def one(p):
-            logits = self.apply_fn(p, tx)
-            acc = jnp.mean((jnp.argmax(logits, -1) == ty).astype(jnp.float32))
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            picked = jnp.take_along_axis(logits, ty[:, None], -1)[:, 0]
-            return acc, jnp.mean(lse - picked)
-        accs, losses = jax.vmap(one)(em)
-        return float(jnp.mean(accs)), float(jnp.mean(losses))
+        acc, loss = self._eval_fn(em, tx, ty)
+        return float(acc), float(loss)

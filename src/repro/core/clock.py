@@ -13,6 +13,7 @@ emitting ``(wall_time, acc)`` curves and :func:`time_to_accuracy`.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.config import FLConfig
@@ -52,11 +53,18 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
     is paced by the slowest device in that round's realized cohort
     (``ScenarioEngine.active_speeds`` × the profile's device_flops);
     without one, by the RuntimeModel's own speeds.
+
+    Besides the *simulated* wall clock, the history records the
+    *simulator's own* per-eval-window host seconds (``sim_s``) — the
+    perf-trajectory instrumentation the benchmarks read to verify that,
+    e.g., a 50%-participation round really does less gradient work than a
+    full one (ModelBank cohort compaction, docs/PERFORMANCE.md).
     """
     clock = EventClock(rt, sim.fl)
     hist: Dict[str, List[float]] = {
         "round": [], "wall_time": [], "acc": [], "loss": [],
-        "participants": []}
+        "participants": [], "sim_s": []}
+    window_t0 = time.perf_counter()
     for r in range(rounds):
         plan = sim.step_round()
         if plan is not None:
@@ -68,12 +76,15 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
             participants = sim.fl.n
         t = clock.charge_round(speeds, uplink_ratio)
         if (r + 1) % eval_every == 0:
+            sim_s = time.perf_counter() - window_t0
             acc, loss = sim.evaluate(eval_batch)
             hist["round"].append(r + 1)
             hist["wall_time"].append(t)
             hist["acc"].append(acc)
             hist["loss"].append(loss)
             hist["participants"].append(participants)
+            hist["sim_s"].append(sim_s)
+            window_t0 = time.perf_counter()
     return hist
 
 

@@ -97,6 +97,39 @@ def compress_tree(cfg: CompressionConfig, tree: Any,
             jax.tree.unflatten(treedef, new_res))
 
 
+def compress_flat(cfg: CompressionConfig, vec: jax.Array,
+                  residual: Optional[jax.Array],
+                  key: Optional[jax.Array],
+                  segments: Tuple[Tuple[int, int], ...]
+                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Flat-domain :func:`compress_tree` for the ModelBank engine.
+
+    ``vec``/``residual`` are one device's (T,) flattened update;
+    ``segments`` are the static per-leaf ``(offset, size)`` boundaries of
+    the bank's FlatLayout, so top-k selection and int8 scales stay
+    *per-leaf* — identical semantics (and identical per-leaf key
+    sequence) to the pytree path, just without materializing the tree."""
+    cfg.validate()
+    if cfg.kind == "none":
+        return vec, residual
+    keys = (jax.random.split(key, len(segments)) if key is not None
+            else [None] * len(segments))
+    out, new_res = [], []
+    for (off, size), k in zip(segments, keys):
+        src = vec[off:off + size]
+        if cfg.error_feedback and residual is not None:
+            src = src + residual[off:off + size]
+        if cfg.kind == "topk":
+            sent = _topk_leaf(src, cfg.topk_frac)
+        else:
+            sent = _int8_leaf(src, k, cfg.stochastic)
+        out.append(sent)
+        new_res.append(src - sent if cfg.error_feedback
+                       else jnp.zeros_like(sent))
+    return jnp.concatenate(out), (jnp.concatenate(new_res)
+                                  if residual is not None else residual)
+
+
 def compression_ratio(cfg: CompressionConfig) -> float:
     """Payload ratio vs uncompressed f32 (for the runtime model)."""
     return cfg.bits_per_param() / 32.0

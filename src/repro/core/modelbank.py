@@ -1,0 +1,142 @@
+"""Flat ModelBank: the simulation engine's resident state as (n, T) buffers.
+
+The paper-faithful engine materializes all n device models (eq. 10 stacks
+them row-wise). Keeping that stack as a *pytree* of (n, ...) leaves makes
+every mixing boundary L per-leaf contractions — each parameter block
+re-read from HBM once per leaf — and forces ``gossip_mix_tree`` callers
+to rebuild a concat/split plan per invocation. The ModelBank instead
+keeps params, momentum and the error-feedback residual as single
+contiguous ``(n, T)`` float32 buffers for the whole run; pytree views are
+materialized only inside the per-device ``apply_fn`` call and at
+checkpoint/eval edges, and every mixing boundary is one streaming pass of
+:func:`repro.kernels.gossip_mix.gossip_mix_rows` (Pallas on TPU, a single
+XLA gemm on CPU/GPU).
+
+Cohort compaction (client sampling, ``core/scenario.py``): when only k of
+n devices participate, the gradient/momentum work runs on a dense
+``(k_pad, T)`` gather of the participating rows instead of a full-n vmap
+with ``where``-frozen masked devices. ``k_pad`` is the cohort size
+rounded up to a static bucket (:func:`cohort_buckets`) so the jitted
+round compiles once per bucket, not once per cohort size; padding lanes
+are filled with *distinct non-participating* rows and masked inactive, so
+the scatter back into the bank writes disjoint rows deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gossip_mix import FlatLayout, gossip_mix_rows
+
+
+class ModelBank:
+    """Params / momentum / EF-residual of all n devices as (n, T) buffers.
+
+    ``layout`` is the :class:`repro.kernels.gossip_mix.FlatLayout` of one
+    device model; ``params``/``mom``/``residual`` are the flat buffers
+    (``residual`` is None unless error-feedback compression is on). The
+    buffers are plain attributes so the jitted round can donate them and
+    the caller reassigns the outputs — peak memory stays ~1× the bank.
+    """
+
+    def __init__(self, layout: FlatLayout, n: int, params_row: jax.Array,
+                 *, with_residual: bool = False):
+        self.layout = layout
+        self.n = n
+        self.params = jnp.tile(params_row[None, :], (n, 1))
+        self.mom = jnp.zeros((n, layout.total), jnp.float32)
+        self.residual = (jnp.zeros((n, layout.total), jnp.float32)
+                         if with_residual else None)
+
+    @classmethod
+    def from_model(cls, one_model, n: int, *,
+                   with_residual: bool = False) -> "ModelBank":
+        """Broadcast a single init model to all n rows (Algorithm 1's
+        shared init, as the pytree engine does)."""
+        layout = FlatLayout.for_tree(one_model)
+        return cls(layout, n, layout.flatten_one(one_model),
+                   with_residual=with_residual)
+
+    # -- pytree edges --------------------------------------------------------
+    def params_tree(self):
+        """Materialize the (n, ...)-leaved pytree view (eval/ckpt edge)."""
+        return self.layout.unflatten_stack(self.params)
+
+    def mean_model(self):
+        """Device-average model as a pytree (the global model x̄)."""
+        return self.layout.unflatten_one(jnp.mean(self.params, 0))
+
+    def project(self, P):
+        """Row-apply a rectangular (m, n) operator to the bank and
+        materialize the resulting m models as a pytree — the edge-model
+        projection P of eq. 11 in one streaming pass."""
+        return self.layout.unflatten_stack(
+            gossip_mix_rows(jnp.asarray(P, jnp.float32), self.params))
+
+
+# ---------------------------------------------------------------------------
+# cohort compaction: static bucket sizes + padded gather plans
+# ---------------------------------------------------------------------------
+
+def cohort_buckets(n: int) -> Tuple[int, ...]:
+    """Static cohort capacities: powers of two up to n, plus n itself.
+
+    The compacted round is traced once per bucket (shapes are static
+    under jit), so a scenario whose cohort size wanders round-to-round
+    compiles at most ``len(cohort_buckets(n))`` variants instead of one
+    per distinct cohort size."""
+    assert n >= 1
+    out = []
+    b = 1
+    while b < n:
+        out.append(b)
+        b <<= 1
+    out.append(n)
+    return tuple(out)
+
+
+def bucket_for(k: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket capacity >= k."""
+    for b in buckets:
+        if b >= k:
+            return b
+    raise ValueError(f"cohort {k} exceeds largest bucket {buckets[-1]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactPlan:
+    """Padded gather plan for one round's cohort.
+
+    ``idx`` holds ``k_pad`` *distinct* device rows: the k participants
+    first, then non-participants as inert padding; ``lane`` marks the
+    real cohort lanes. Distinctness makes the scatter back into the bank
+    (``bank.at[idx].set``) write disjoint rows — deterministic, and the
+    padding lanes write back their untouched values."""
+    idx: np.ndarray     # (k_pad,) int32, distinct
+    lane: np.ndarray    # (k_pad,) bool
+    k: int              # true cohort size
+    k_pad: int          # bucket capacity
+
+
+def compact_plan(mask: np.ndarray,
+                 buckets: Optional[Tuple[int, ...]] = None) -> CompactPlan:
+    """Build the padded cohort gather plan for a 0/1 participation mask."""
+    mask = np.asarray(mask)
+    n = mask.shape[0]
+    if buckets is None:
+        buckets = cohort_buckets(n)
+    cohort = np.nonzero(mask > 0)[0]
+    k = int(cohort.shape[0])
+    assert k >= 1, "compact_plan needs at least one participant"
+    k_pad = bucket_for(k, buckets)
+    pad = k_pad - k
+    if pad:
+        complement = np.nonzero(mask <= 0)[0]
+        cohort = np.concatenate([cohort, complement[:pad]])
+    lane = np.zeros(k_pad, bool)
+    lane[:k] = True
+    return CompactPlan(cohort.astype(np.int32), lane, k, k_pad)

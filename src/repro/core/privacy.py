@@ -95,6 +95,24 @@ def privatize_update(tree: Any, dp: DPConfig, key: jax.Array) -> Any:
     return jax.tree.unflatten(treedef, noisy)
 
 
+def privatize_update_flat(vec: jax.Array, dp: DPConfig,
+                          key: jax.Array) -> jax.Array:
+    """Flat-domain :func:`privatize_update` for the ModelBank engine.
+
+    The L2 norm of the (T,) flattened update IS the tree's global norm,
+    so clipping is bit-identical to the pytree path; the Gaussian noise
+    is one (T,) draw instead of per-leaf draws — same mechanism and
+    calibration, different pseudorandom stream."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(vec.astype(jnp.float32))))
+    factor = jnp.minimum(1.0, dp.clip_norm / jnp.maximum(norm, 1e-12))
+    clipped = (vec.astype(jnp.float32) * factor).astype(vec.dtype)
+    if not dp.enabled:
+        return clipped
+    sigma = dp.noise_multiplier * dp.clip_norm
+    noise = sigma * jax.random.normal(key, vec.shape)
+    return (clipped.astype(jnp.float32) + noise).astype(vec.dtype)
+
+
 def gaussian_epsilon(noise_multiplier: float, delta: float = 1e-5) -> float:
     """Single-release Gaussian-mechanism bound: eps = sqrt(2 ln(1.25/δ))/σ."""
     if noise_multiplier <= 0:

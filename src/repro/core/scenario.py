@@ -73,6 +73,12 @@ class RoundPlan:
         return self.mask > 0
 
     @property
+    def cohort(self) -> np.ndarray:
+        """Indices of the participating devices — the rows the ModelBank
+        engine gathers into its compacted (k_pad, T) batch."""
+        return np.nonzero(self.mask > 0)[0]
+
+    @property
     def cluster_sizes(self) -> np.ndarray:
         """Device count per cluster under this round's B_t."""
         return np.bincount(self.labels, minlength=self.num_clusters)

@@ -68,6 +68,15 @@ def gossip_mix_flat(W, Y, block=2048, interpret=None):
     return _gm.gossip_mix_flat(W, Y, block=block, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gossip_mix_rows(W, Y, block=2048, interpret=False):
+    """Row-apply W @ Y on a flat (n, T) bank: the ModelBank mixing
+    boundary. Dispatches per backend (Pallas on TPU, single XLA gemm
+    elsewhere); ``interpret=True`` forces the Pallas kernel in interpret
+    mode for validation."""
+    return _gm.gossip_mix_rows(W, Y, block=block, interpret=interpret)
+
+
 def gossip_mix_tree(W, params, block=2048, interpret=None):
     if interpret is None:
         interpret = _interpret_default()

@@ -51,3 +51,9 @@ def ssd_intra_chunk_ref(x, a_t, Bc, Cc, dtc):
 def gossip_mix_ref(W, Y):
     """Y: (n, T); returns WᵀY."""
     return (W.astype(jnp.float32).T @ Y.astype(jnp.float32)).astype(Y.dtype)
+
+
+def gossip_mix_rows_ref(W, Y):
+    """Y: (n, T); returns W @ Y (row application) — the single-pass XLA
+    form of the ModelBank mixing boundary on CPU/GPU hosts."""
+    return (W.astype(jnp.float32) @ Y.astype(jnp.float32)).astype(Y.dtype)

@@ -1,0 +1,351 @@
+"""Flat ModelBank engine (ISSUE 3): parity vs the legacy pytree engine,
+cohort compaction across bucket boundaries, buffer donation / retracing,
+FlatLayout caching, and the flat-domain upload transforms."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, ScenarioConfig
+from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
+from repro.core.compress import (CompressionConfig, compress_flat,
+                                 compress_tree)
+from repro.core.modelbank import (ModelBank, bucket_for, cohort_buckets,
+                                  compact_plan)
+from repro.core.privacy import (DPConfig, clip_by_global_norm,
+                                privatize_update_flat)
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.kernels.gossip_mix import (FlatLayout, gossip_mix_rows,
+                                      gossip_mix_tree)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+
+def _sim(fl, *, scenario=None, seed=0, lr=0.1, bank=True, compression=None,
+         dp=None):
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, data, lr=lr, batch_size=16, seed=seed,
+        scenario=scenario, compression=compression, dp=dp, bank=bank)
+
+
+def _params_close(a, b, atol=1e-5):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+_FL = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+               devices_per_cluster=2, tau=2, q=2, pi=4, topology="ring")
+
+
+# ---------------------------------------------------------------------------
+# FlatLayout: roundtrip + the cached concat/split plan
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0, n=None):
+    k = jax.random.PRNGKey(seed)
+    shape = lambda s: ((n,) + s if n else s)          # noqa: E731
+    return {"a": jax.random.normal(k, shape((5, 3))),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), shape((7,))),
+            "c": {"d": jax.random.normal(jax.random.fold_in(k, 2),
+                                         shape((2, 2, 2)))}}
+
+
+def test_flat_layout_roundtrip_one_and_stack():
+    t = _tree()
+    lay = FlatLayout.for_tree(t)
+    assert lay.total == 5 * 3 + 7 + 8
+    _params_close(lay.unflatten_one(lay.flatten_one(t)), t, atol=0)
+    ts = _tree(n=6)
+    lay2 = FlatLayout.for_stacked(ts)
+    assert lay2 is lay  # same trailing structure -> same cached plan
+    _params_close(lay2.unflatten_stack(lay2.flatten_stack(ts)), ts, atol=0)
+
+
+def test_flat_layout_cached_per_structure():
+    a = FlatLayout.for_tree(_tree(0))
+    b = FlatLayout.for_tree(_tree(9))      # same structure, other values
+    assert a is b
+    c = FlatLayout.for_tree({"x": jnp.zeros((3,))})
+    assert c is not a and c.total == 3
+
+
+def test_flat_layout_segments_match_offsets():
+    lay = FlatLayout.for_tree(_tree())
+    assert lay.segments == tuple(zip(lay.offsets, lay.sizes))
+    assert lay.offsets[0] == 0
+    assert lay.offsets[-1] + lay.sizes[-1] == lay.total
+
+
+# ---------------------------------------------------------------------------
+# fused row-apply kernel path
+# ---------------------------------------------------------------------------
+
+def test_gossip_mix_tree_matches_mix_for_asymmetric_w():
+    """Row-application semantics: must agree with mix() for the
+    row-stochastic (asymmetric) masked operators, not just symmetric W."""
+    from repro.core import topology as topo
+    B = topo.assignment_matrix([0, 0, 0, 1, 2, 2], 3)
+    H = topo.mixing_matrix(topo.ring(3))
+    W = topo.masked_inter_operator(B, H, 2, np.array([1, 0, 1, 1, 1, 1.0]))
+    assert not np.allclose(W, W.T)   # genuinely asymmetric
+    params = _tree(seed=1, n=6)
+    got = gossip_mix_tree(W, params, interpret=True)
+    _params_close(got, mix(W, params), atol=1e-5)
+
+
+@pytest.mark.parametrize("n,T", [(8, 100), (16, 1 << 18),
+                                 (16, (1 << 18) + 37), (4, 3 * (1 << 18))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mix_rows_blocked_matches_gemm(n, T, dtype):
+    """The in-place CPU streaming pass (tile loop) is exact vs the gemm
+    oracle across tile-divisibility edge cases and dtypes."""
+    from repro.kernels.gossip_mix import _mix_rows_blocked
+    from repro.kernels.ref import gossip_mix_rows_ref
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    W = jax.random.uniform(ks[0], (n, n))
+    W = W / W.sum(1, keepdims=True)
+    Y = jax.random.normal(ks[1], (n, T)).astype(dtype)
+    got = jax.jit(_mix_rows_blocked)(W, Y)
+    exp = gossip_mix_rows_ref(W, Y)
+    assert got.dtype == Y.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32), atol=tol)
+
+
+def test_gossip_mix_rows_matches_ref_and_rectangular():
+    k = jax.random.PRNGKey(0)
+    Y = jax.random.normal(k, (6, 301))
+    W = jax.random.uniform(jax.random.fold_in(k, 1), (6, 6))
+    W = W / W.sum(1, keepdims=True)
+    np.testing.assert_allclose(
+        np.asarray(gossip_mix_rows(W, Y, interpret=True)),
+        np.asarray(W @ Y), atol=1e-5)
+    P = jax.random.uniform(jax.random.fold_in(k, 2), (2, 6))  # edge proj
+    np.testing.assert_allclose(
+        np.asarray(gossip_mix_rows(P, Y, interpret=True)),
+        np.asarray(P @ Y), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# parity: ModelBank engine vs legacy pytree engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["ce_fedavg", "hier_favg", "fedavg",
+                                  "local_edge"])
+def test_bank_matches_legacy_full_participation(algo):
+    """Acceptance: full-mask equivalence with the legacy engine (static
+    schedule) before any benchmark numbers are trusted."""
+    fl = dataclasses.replace(_FL, algorithm=algo)
+    sb, sl = _sim(fl), _sim(fl, bank=False)
+    sb.run(3)
+    sl.run(3)
+    _params_close(sb.params, sl.params)
+    _params_close(sb.mom, sl.mom)
+    np.testing.assert_allclose(sb.evaluate(), sl.evaluate(), atol=1e-5)
+
+
+def test_bank_matches_legacy_under_lognormal_mobility_sampling():
+    """Trajectory equivalence under a non-trivial scenario: lognormal
+    speeds + mobility + sampling with dropout (compacted cohorts)."""
+    sc = ScenarioConfig(speed_dist="lognormal", speed_spread=0.6,
+                        sample_fraction=0.6, dropout_prob=0.2,
+                        move_prob=0.3, seed=3)
+    sb, sl = _sim(_FL, scenario=sc), _sim(_FL, scenario=sc, bank=False)
+    for _ in range(5):
+        sb.step_round()
+        sl.step_round()
+    assert sb.last_bucket < sb.bank.n   # compaction actually engaged
+    _params_close(sb.params, sl.params)
+
+
+def test_bank_compaction_across_bucket_boundaries():
+    """Cohort sizes that wander across bucket boundaries round-to-round
+    stay correct (each bucket is a separate trace of the same round)."""
+    n = _FL.n
+    buckets_seen = set()
+    sc = ScenarioConfig(sample_fraction=1.0, dropout_prob=0.55, seed=7)
+    sb, sl = _sim(_FL, scenario=sc), _sim(_FL, scenario=sc, bank=False)
+    for _ in range(8):
+        sb.step_round()
+        buckets_seen.add(sb.last_bucket)
+        sl.step_round()
+    assert len(buckets_seen) >= 2, buckets_seen   # crossed a boundary
+    assert all(b in cohort_buckets(n) for b in buckets_seen)
+    _params_close(sb.params, sl.params)
+
+
+def test_bank_learns_and_syncs_clusters():
+    fl = dataclasses.replace(_FL, tau=1, q=1, pi=2)
+    s = _sim(fl)
+    s.run(1)
+    w = np.asarray(jax.tree.leaves(s.params)[0])
+    for c in range(4):
+        np.testing.assert_allclose(w[2 * c], w[2 * c + 1], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# donation + retracing + eval jit cache
+# ---------------------------------------------------------------------------
+
+def test_round_donates_bank_buffers():
+    """donate_argnums on the jitted round: the previous round's buffers
+    are invalidated, so peak memory stays ~1x the bank."""
+    s = _sim(_FL)
+    y0, m0 = s.bank.params, s.bank.mom
+    s.step_round()
+    assert y0.is_deleted() and m0.is_deleted()
+
+
+def test_no_per_round_retracing_across_scenario_rounds():
+    """jit cache-miss counter: after every bucket has been seen once, more
+    scenario rounds add no new traces."""
+    sc = ScenarioConfig(sample_fraction=0.6, dropout_prob=0.3,
+                        move_prob=0.3, seed=1)
+    s = _sim(_FL, scenario=sc)
+    n_buckets = len(cohort_buckets(s.bank.n))
+    for _ in range(6):
+        s.step_round()
+    sizes = (s._round_flat._cache_size(), s._round_compact._cache_size())
+    assert sizes[0] <= 1 and sizes[1] <= n_buckets
+    for _ in range(6):
+        s.step_round()
+    after = (s._round_flat._cache_size(), s._round_compact._cache_size())
+    assert after[0] <= 1 and after[1] <= n_buckets
+    # every incremental trace must correspond to a new bucket, never a
+    # re-trace of a shape that was already compiled
+    assert after[1] - sizes[1] <= n_buckets - sizes[1]
+
+
+def test_evaluate_traces_once_per_eval_batch_shape():
+    s = _sim(_FL)
+    s.evaluate(128)
+    s.evaluate(128)
+    s.evaluate(128)
+    assert s._eval_fn._cache_size() == 1
+    s.evaluate(256)
+    assert s._eval_fn._cache_size() == 2
+
+
+# ---------------------------------------------------------------------------
+# cohort bucket helpers
+# ---------------------------------------------------------------------------
+
+def test_cohort_buckets_and_bucket_for():
+    assert cohort_buckets(16) == (1, 2, 4, 8, 16)
+    assert cohort_buckets(12) == (1, 2, 4, 8, 12)
+    assert cohort_buckets(1) == (1,)
+    bks = cohort_buckets(12)
+    assert bucket_for(1, bks) == 1
+    assert bucket_for(5, bks) == 8
+    assert bucket_for(12, bks) == 12
+    with pytest.raises(ValueError):
+        bucket_for(13, bks)
+
+
+def test_compact_plan_distinct_rows_and_lanes():
+    mask = np.array([1, 0, 0, 1, 1, 0, 0, 0.0])
+    cp = compact_plan(mask)
+    assert cp.k == 3 and cp.k_pad == 4
+    assert len(set(cp.idx.tolist())) == cp.k_pad     # scatter-safe
+    assert cp.lane.sum() == cp.k
+    assert set(cp.idx[cp.lane].tolist()) == {0, 3, 4}
+    assert all(mask[i] == 0 for i in cp.idx[~cp.lane])  # inert padding
+
+
+# ---------------------------------------------------------------------------
+# flat-domain upload transforms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    CompressionConfig("topk", topk_frac=0.3),
+    CompressionConfig("topk", topk_frac=0.3, error_feedback=False),
+    CompressionConfig("int8", stochastic=False),
+    CompressionConfig("int8", stochastic=True),
+])
+def test_compress_flat_matches_compress_tree(cfg):
+    tree = _tree(seed=2)
+    lay = FlatLayout.for_tree(tree)
+    res_tree = jax.tree.map(lambda l: 0.1 * l, _tree(seed=5))
+    key = jax.random.PRNGKey(0)
+    sent_t, newres_t = compress_tree(cfg, tree, res_tree, key)
+    sent_f, newres_f = compress_flat(cfg, lay.flatten_one(tree),
+                                     lay.flatten_one(res_tree), key,
+                                     lay.segments)
+    _params_close(lay.unflatten_one(sent_f), sent_t, atol=1e-6)
+    if cfg.error_feedback:
+        _params_close(lay.unflatten_one(newres_f), newres_t, atol=1e-6)
+
+
+def test_privatize_flat_clips_like_tree():
+    tree = _tree(seed=3)
+    lay = FlatLayout.for_tree(tree)
+    dp = DPConfig(clip_norm=0.5, noise_multiplier=0.0)
+    flat = privatize_update_flat(lay.flatten_one(tree), dp,
+                                 jax.random.PRNGKey(0))
+    _params_close(lay.unflatten_one(flat),
+                  clip_by_global_norm(tree, 0.5), atol=1e-6)
+
+
+def test_privatize_flat_noise_calibration():
+    dp = DPConfig(clip_norm=1.0, noise_multiplier=1.0)
+    vec = jnp.zeros((4000,))
+    noisy = privatize_update_flat(vec, dp, jax.random.PRNGKey(0))
+    assert 0.9 < float(jnp.std(noisy)) < 1.1
+
+
+@pytest.mark.parametrize("cfg", [CompressionConfig("topk", topk_frac=0.25),
+                                 CompressionConfig("int8")])
+def test_bank_matches_legacy_with_compression(cfg):
+    """The flat-domain upload path reproduces the pytree path (same
+    per-device / per-leaf key schedule)."""
+    sb = _sim(_FL, compression=cfg)
+    sl = _sim(_FL, compression=cfg, bank=False)
+    sb.run(2)
+    sl.run(2)
+    _params_close(sb.params, sl.params)
+    if cfg.error_feedback:
+        _params_close(sb.residual, sl.residual)
+
+
+def test_bank_dp_training_learns():
+    """DP noise is one flat draw (different stream than the per-leaf
+    pytree path — same mechanism), so assert convergence, not parity."""
+    s = _sim(_FL, dp=DPConfig(clip_norm=1.0, noise_multiplier=0.3))
+    hist = s.run(5)
+    assert np.isfinite(hist["loss"][-1])
+    assert hist["acc"][-1] > 0.4, hist["acc"]
+
+
+# ---------------------------------------------------------------------------
+# bank state API (checkpoint/eval edges)
+# ---------------------------------------------------------------------------
+
+def test_bank_state_roundtrip_through_pytree_setters():
+    s = _sim(_FL)
+    s.run(1)
+    p = s.params
+    s.params = p          # e.g. checkpoint restore
+    _params_close(s.params, p, atol=0)
+    gm = s.global_model()
+    em = jax.tree.leaves(s.edge_models())[0]
+    assert em.shape[0] == s.fl.num_clusters
+    assert jax.tree.leaves(gm)[0].shape == em.shape[1:]
+
+
+def test_modelbank_from_model_broadcasts_shared_init():
+    one = init_mlp_classifier(jax.random.PRNGKey(0), 16, 32, 4)
+    bank = ModelBank.from_model(one, 6)
+    assert bank.params.shape == (6, bank.layout.total)
+    _params_close(bank.layout.unflatten_one(bank.params[3]), one, atol=0)
+    assert bank.residual is None
+    assert float(jnp.abs(bank.mom).max()) == 0.0
