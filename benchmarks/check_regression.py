@@ -1,0 +1,112 @@
+"""CI perf regression guard (ISSUE 4): smoke bench vs committed baseline.
+
+Absolute ``us_per_call`` numbers are not comparable across hosts or
+shapes (the smoke lane runs tiny MLP surrogates on shared CI runners),
+but the *derived ratios* in the bench records are contracts the hot path
+must keep. This script parses the ``key=value`` fields out of the
+``derived`` strings of a smoke-mode ``benchmarks.run --json`` file and
+checks each guarded metric against the committed ``BENCH_<tag>.json``
+baseline with a generous tolerance:
+
+- ``speedup_vs_perleaf`` (fused single-pass qt-boundary vs the legacy
+  2-pass per-leaf boundary) is memory-bound at every shape: the smoke
+  value must stay within ``tolerance`` of the committed speedup
+  (``smoke >= baseline / tolerance``).
+- ``half/full_round_time`` (cohort compaction) only *pays* at real
+  shapes — at smoke shapes fixed dispatch overhead dominates — so the
+  guard is one-sided: the half-participation round must not blow past
+  the full round by more than ``tolerance``
+  (``smoke <= max(1, baseline) * tolerance``), which still catches the
+  real failure modes (per-round recompiles, full-n gradient work plus
+  the gather).
+
+Exit code 1 on any regression or missing record; the smoke JSON is also
+uploaded as a workflow artifact for the perf trajectory.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \\
+      --smoke bench_smoke.json --baseline BENCH_pr3.json --tolerance 2.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+# guarded metrics: (derived field, baseline record, smoke record, mode)
+#   floor    smoke >= baseline / tol          (higher is better)
+#   ceiling  smoke <= max(1, baseline) * tol  (lower is better, smoke
+#            shapes may legitimately sit near 1)
+# The boundary benchmark runs at the real FEMNIST bank size even under
+# --smoke (the fused-pass advantage is scale-dependent), so its record
+# name matches the baseline's; only the compaction rounds shrink.
+CHECKS = (
+    ("speedup_vs_perleaf", "kern_boundary_fused_femnist_cnn_n16",
+     "kern_boundary_fused_femnist_cnn_n16", "floor"),
+    ("half/full_round_time", "kern_compaction_ratio_femnist_cnn",
+     "kern_compaction_ratio_mlp_smoke", "ceiling"),
+)
+
+_NUM = r"([-+0-9.eE]+)"
+
+
+def derived_field(records, name: str, field: str) -> float:
+    """Numeric ``field=<value>`` from record ``name``'s derived string."""
+    by_name = {r["name"]: r for r in records}
+    if name not in by_name:
+        raise KeyError(f"record {name!r} missing "
+                       f"(have {sorted(by_name)})")
+    derived = by_name[name]["derived"]
+    m = re.search(re.escape(field) + "=" + _NUM, derived)
+    if not m:
+        raise KeyError(f"field {field!r} missing from {name!r}: {derived}")
+    return float(m.group(1))
+
+
+def check(smoke_records, baseline_records, tolerance: float):
+    """Evaluate every guarded metric; returns (failures, report lines)."""
+    failures, lines = [], []
+    for field, base_name, smoke_name, mode in CHECKS:
+        base = derived_field(baseline_records, base_name, field)
+        smoke = derived_field(smoke_records, smoke_name, field)
+        if mode == "floor":
+            bound = base / tolerance
+            ok = smoke >= bound
+            rel = f">= {bound:.2f}"
+        else:
+            bound = max(1.0, base) * tolerance
+            ok = smoke <= bound
+            rel = f"<= {bound:.2f}"
+        lines.append(f"{'OK  ' if ok else 'FAIL'} {field}: smoke={smoke:.2f} "
+                     f"{rel} (baseline={base:.2f}, tol={tolerance}x)")
+        if not ok:
+            failures.append(field)
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", required=True,
+                    help="bench_smoke.json from benchmarks.run --smoke")
+    ap.add_argument("--baseline", default="BENCH_pr3.json",
+                    help="committed perf-trajectory baseline")
+    ap.add_argument("--tolerance", type=float, default=2.5)
+    args = ap.parse_args(argv)
+    with open(args.smoke) as f:
+        smoke = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    try:
+        failures, lines = check(smoke, baseline, args.tolerance)
+    except KeyError as e:
+        print(f"FAIL missing bench record: {e}")
+        return 1
+    print("\n".join(lines))
+    if failures:
+        print(f"perf regression in: {', '.join(failures)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

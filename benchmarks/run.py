@@ -27,8 +27,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import (Timer, make_data, make_sim, paper_runtime,
-                               row, time_to_accuracy)  # noqa: E402
+from benchmarks.common import (Timer, make_data, make_sim,  # noqa: E402
+                               paper_runtime, row, time_to_accuracy)
 from repro.config import FLConfig  # noqa: E402
 
 ROUNDS = 10
@@ -130,6 +130,26 @@ def tab1(full=False):
     row("tab1_m1_equals_fedavg", 0.0, f"op_err={err2:.2e}")
 
 
+def _smoke_compaction_sim(flc, scenario):
+    """Compaction sim for --smoke: a 64->256->32 MLP (~25k params/row)
+    on 64-sample batches, so per-round device work dominates the fixed
+    host overhead and half/full_round_time reflects gradient-work
+    scaling even on a 2-core CI runner."""
+    from repro.core.cefedavg import FLSimulator
+    from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                      make_synthetic_classification)
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+    x, y = make_synthetic_classification(1600, 64, 32, seed=0)
+    tx, ty = make_synthetic_classification(128, 64, 32, seed=1)
+    parts = dirichlet_partition(y, flc.n, 0.5, 0)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=96)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 64, 256, 32),
+        apply_mlp_classifier, flc, data, lr=0.1, batch_size=64, seed=0,
+        scenario=scenario)
+
+
 def kern_bank(full=False, smoke=False):
     """ModelBank hot-path microbenchmarks (ISSUE 3 acceptance):
 
@@ -150,17 +170,22 @@ def kern_bank(full=False, smoke=False):
     """
     from repro.core.cefedavg import make_w_schedule, mix
     from repro.kernels.gossip_mix import FlatLayout, gossip_mix_rows
-    from repro.models.cnn import init_femnist_cnn, init_mlp_classifier
+    from repro.models.cnn import init_femnist_cnn
     n = 16
     fl = _fl(m=4, dpc=4)
     sched = make_w_schedule(fl)
     W_i = jnp.asarray(sched.W_intra, jnp.float32)
     W_e = jnp.asarray(sched.W_inter, jnp.float32)
     W_comb = jnp.asarray(sched.W_inter @ sched.W_intra, jnp.float32)
-    if smoke:
-        one = init_mlp_classifier(jax.random.PRNGKey(0), 64, 256, 32)
-    else:
-        one = init_femnist_cnn(jax.random.PRNGKey(0))
+    # The boundary microbenchmark ALWAYS runs at the real FEMNIST-CNN
+    # bank size (423 MB), --smoke included: the in-place fused pass
+    # beats the per-leaf baseline *because* allocation/page-fault costs
+    # dominate at that scale — at cache-or-near sizes the contrast
+    # inverts or drowns in noise (measured 0.5x-4.3x at 1.6-21 MB
+    # banks), which would make the CI regression guard meaningless.
+    # Only the *round* benchmarks (compaction below) shrink under
+    # --smoke; the boundary adds ~10 s.
+    one = init_femnist_cnn(jax.random.PRNGKey(0))
     layout = FlatLayout.for_tree(one)
     params = jax.tree.map(
         lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), one)
@@ -169,7 +194,7 @@ def kern_bank(full=False, smoke=False):
                                         (n,) + (1,) * (l.ndim - 1)), params)
     Y = layout.flatten_stack(params)
     T = layout.total
-    tag = "femnist_cnn" if not smoke else "mlp_smoke"
+    tag = "femnist_cnn"
 
     import functools
     import time as _time
@@ -190,7 +215,7 @@ def kern_bank(full=False, smoke=False):
     def f_flat(Y):
         return gossip_mix_rows(W_comb, Y)
 
-    reps = 2 if smoke else 7
+    reps = 7
     jax.block_until_ready(f_leaf(params))
     jax.block_until_ready(f_leaf(params))
     t_leaf = t_flat = float("inf")
@@ -217,30 +242,46 @@ def kern_bank(full=False, smoke=False):
             f"fused boundary must be >=2x the per-leaf baseline, got "
             f"{speedup:.2f}x")
 
-    # -- cohort compaction: 50% participation vs full, wall-timed --------
+    # -- cohort compaction: 50% participation vs full, wall-timed.
+    # Best-of-reps per path (the standard tight-loop protocol above): a
+    # mean over one or two rounds lets a stray recompile (a cohort
+    # drawing a fresh bucket) or an allocator hiccup land inside the
+    # measurement — observed up to ~4x outliers at smoke shapes, which
+    # the CI regression guard would misread as a compaction regression.
+    # Smoke mode also needs enough *device* work per round (bigger MLP,
+    # bigger batch, q·τ = 4 local steps) that the ratio measures
+    # gradient-work scaling and not the fixed per-round host overhead
+    # the half path additionally pays for its scenario engine.
     from repro.config import ScenarioConfig
-    rounds = 1 if smoke else 2
+    rounds = 3 if smoke else 2
+    rtag = "mlp_smoke" if smoke else "femnist_cnn"
     times = {}
     for frac in (1.0, 0.5):
-        flc = _fl(m=4, dpc=4, tau=1, q=1, pi=2)
         sc = (None if frac >= 1.0 else
               ScenarioConfig(name="bench", sample_fraction=frac, seed=0))
-        sim = make_sim(flc, make_data(flc, full=not smoke),
-                       full=not smoke, scenario=sc, batch_size=16)
+        if smoke:
+            flc = _fl(m=4, dpc=4, tau=2, q=2, pi=2)
+            sim = _smoke_compaction_sim(flc, sc)
+        else:
+            flc = _fl(m=4, dpc=4, tau=1, q=1, pi=2)
+            sim = make_sim(flc, make_data(flc, full=True), full=True,
+                           scenario=sc, batch_size=16)
         sim.step_round()                       # compile + first buckets
         jax.block_until_ready(sim.bank.params)
-        with Timer() as t:
-            for _ in range(rounds):
+        best = float("inf")
+        for _ in range(rounds):
+            with Timer() as t:
                 sim.step_round()
-            jax.block_until_ready(sim.bank.params)
-        times[frac] = t.dt / rounds
+                jax.block_until_ready(sim.bank.params)
+            best = min(best, t.dt)
+        times[frac] = best
         label = "full" if frac >= 1.0 else "half"
         extra = (f"cohort_bucket={sim.last_bucket}" if frac < 1.0
                  else f"n={flc.n}")
-        row(f"kern_round_{label}_participation_{tag}", times[frac] * 1e6,
+        row(f"kern_round_{label}_participation_{rtag}", times[frac] * 1e6,
             f"bank_engine;{extra}")
     ratio = times[0.5] / times[1.0]
-    row(f"kern_compaction_ratio_{tag}", 0.0,
+    row(f"kern_compaction_ratio_{rtag}", 0.0,
         f"half/full_round_time={ratio:.2f};gradient work scales with "
         f"cohort (<1.0 means compaction pays)")
     if not smoke:
@@ -251,7 +292,6 @@ def kern_bank(full=False, smoke=False):
 def kern(full=False, smoke=False):
     """Kernel-path microbenchmarks (XLA reference path on this host; the
     Pallas kernels target TPU and are validated interpret-mode in tests)."""
-    import time
     from repro.models.layers import attention_core
     from repro.models.ssm import ssd_chunked
     from repro.core.cefedavg import mix
@@ -321,8 +361,10 @@ def main() -> None:
                          "({name, us_per_call, derived}; the perf "
                          "trajectory format, docs/PERFORMANCE.md)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI perf-smoke mode: tiny shapes, no asserts on "
-                         "ratios, kernels in interpret-safe sizes")
+                    help="CI perf-smoke mode: full-size fused-boundary "
+                         "bench, reduced-shape rounds, no hard ratio "
+                         "asserts (benchmarks/check_regression.py guards "
+                         "the derived ratios instead)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     from benchmarks.common import dump_records, reset_records

@@ -165,6 +165,10 @@ class FLSimulator:
         # cluster-uniform from the start.
         one = init_fn(jax.random.PRNGKey(seed))
         self.bank: Optional[ModelBank] = None
+        # cohort compaction gathers bank rows into a dense (k_pad, T) slab;
+        # the sharded engine (core.sharded.ShardedBankCEFedAvg) pins rows
+        # to devices and disables it, running mask-frozen full rows instead
+        self._compact_enabled = True
         if bank:
             self.bank = ModelBank.from_model(one, n,
                                              with_residual=with_residual)
@@ -495,7 +499,7 @@ class FLSimulator:
         b = self.bank
         plain = self.compression is None and self.dp is None
         k_active = b.n if mask_np is None else int(mask_np.sum())
-        if plain and k_active < b.n:
+        if plain and k_active < b.n and self._compact_enabled:
             cp = compact_plan(mask_np, self._buckets)
             self.last_bucket = cp.k_pad
             W_comb = jnp.asarray(plan.W_inter @ plan.W_intra, jnp.float32)

@@ -78,6 +78,16 @@ def ppermute(x: jax.Array, mesh: Mesh,
     return jax.lax.ppermute(x, replica_axis_names(mesh), perm=list(perm))
 
 
+def rotate_perm(mesh: Mesh, shift: int = 1) -> Tuple[Tuple[int, int], ...]:
+    """Cyclic (src, dst) pairs on the flat replica axis: after one
+    application of the returned perm, device d holds what device
+    ``(d + shift) % R`` held — the building block of the weighted-rotation
+    mixes (``core.gossip.dense_mix_rows`` and the ``ringweight`` backend).
+    """
+    R = flat_axis_size(mesh)
+    return tuple(((d + shift) % R, d) for d in range(R))
+
+
 def psum_groups(x: jax.Array, mesh: Mesh,
                 groups: Sequence[Sequence[int]]) -> jax.Array:
     """Grouped psum over the flat replica axis (flat replica ids)."""

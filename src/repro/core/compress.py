@@ -18,7 +18,7 @@ model so time-to-accuracy reflects the smaller payloads.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

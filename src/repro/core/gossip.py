@@ -25,7 +25,7 @@ a cluster permutation is a replica permutation, wherever the replicas live.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -158,73 +158,130 @@ def _unrolled() -> bool:
     return analysis_mode()
 
 
-def apply_gossip(sched: GossipSchedule, params, specs, mesh: Mesh):
-    """Apply the schedule to replica-stacked params (leading axis R)."""
+def gossip_in_body(sched: GossipSchedule, mesh: Mesh, p):
+    """Apply the schedule to the LOCAL shard ``p`` (pytree of f32 leaves)
+    inside an existing ``shard_map`` body.
+
+    This is the reusable core of :func:`apply_gossip`: the pytree trainer
+    wraps it in its own shard_map, and the sharded ModelBank engine
+    (``core.sharded.ShardedBankCEFedAvg``) calls it on bank-row shards to
+    fuse the π gossip rounds into the same pass as the intra-cluster psum
+    — O(π·deg·|row|) neighbor ``ppermute`` traffic, the full bank never
+    materialized on one device."""
     M = sched.num_clusters
     if M == 1:
-        return params
+        return p
     dpc = sched.devices_per_cluster
     R = col.flat_axis_size(mesh)
     assert R == M * dpc, (R, M, dpc)
 
     if sched.mode == "exact":
         h_pi = jnp.asarray(sched.h_pi, jnp.float32)
-        rot = [((s + dpc) % R, s) for s in range(R)]
-
-        def body(p):
-            c = col.flat_axis_index(mesh) // dpc
-            buf = jax.tree.map(lambda x: x.astype(jnp.float32), p)
-            acc = jax.tree.map(lambda b: h_pi[c, c] * b, buf)
-            for s in range(1, M):
-                buf = jax.tree.map(
-                    lambda b: col.ppermute(b, mesh, rot), buf)
-                w = h_pi[(c + s) % M, c]
-                acc = jax.tree.map(lambda a, b: a + w * b, acc, buf)
-            return jax.tree.map(lambda x, o: o.astype(x.dtype), p, acc)
-
-        return col.shard_map(body, mesh, (specs,), specs)(params)
+        rot = col.rotate_perm(mesh, dpc)
+        c = col.flat_axis_index(mesh) // dpc
+        buf = p
+        acc = jax.tree.map(lambda b: h_pi[c, c] * b, buf)
+        for s in range(1, M):
+            buf = jax.tree.map(
+                lambda b: col.ppermute(b, mesh, rot), buf)
+            w = h_pi[(c + s) % M, c]
+            acc = jax.tree.map(lambda a, b: a + w * b, acc, buf)
+        return acc
 
     w_self = jnp.asarray(sched.w_self, jnp.float32)
     w_tbl = jnp.asarray(sched.weights, jnp.float32)
     perms = sched.perms
+    c = col.flat_axis_index(mesh) // dpc
+    ws = w_self[c]
+    wk = w_tbl[:, c]
+
+    def gossip_step(_, q):
+        def leaf(xf):
+            acc = ws * xf
+            for k, perm_k in enumerate(perms):
+                acc = acc + wk[k] * col.ppermute(xf, mesh, perm_k)
+            return acc
+        return jax.tree.map(leaf, q)
+
+    if _unrolled():   # unroll so cost_analysis counts every step
+        q = p
+        for i in range(sched.pi):
+            q = gossip_step(i, q)
+        return q
+    return jax.lax.fori_loop(0, sched.pi, gossip_step, p)
+
+
+def apply_gossip(sched: GossipSchedule, params, specs, mesh: Mesh):
+    """Apply the schedule to replica-stacked params (leading axis R)."""
+    if sched.num_clusters == 1:
+        return params
 
     def body(p):
-        c = col.flat_axis_index(mesh) // dpc
-        ws = w_self[c]
-        wk = w_tbl[:, c]
-
-        def gossip_step(_, q):
-            def leaf(xf):
-                acc = ws * xf
-                for k, perm_k in enumerate(perms):
-                    acc = acc + wk[k] * col.ppermute(xf, mesh, perm_k)
-                return acc
-            return jax.tree.map(leaf, q)
-
-        q0 = jax.tree.map(lambda x: x.astype(jnp.float32), p)
-        if _unrolled():   # unroll so cost_analysis counts every step
-            q = q0
-            for i in range(sched.pi):
-                q = gossip_step(i, q)
-        else:
-            q = jax.lax.fori_loop(0, sched.pi, gossip_step, q0)
+        q = gossip_in_body(
+            sched, mesh, jax.tree.map(lambda x: x.astype(jnp.float32), p))
         return jax.tree.map(lambda x, o: o.astype(x.dtype), p, q)
 
     return col.shard_map(body, mesh, (specs,), specs)(params)
 
 
-def apply_cluster_mean(params, specs, mesh: Mesh, num_clusters: int,
-                       devices_per_cluster: int):
-    """Intra-cluster averaging via grouped psum on the flat replica axis."""
+def cluster_mean_in_body(mesh: Mesh, p, num_clusters: int,
+                         devices_per_cluster: int):
+    """Intra-cluster averaging of the LOCAL f32 shard inside an existing
+    ``shard_map`` body: one grouped psum per leaf over the flat replica
+    axis (eq. 11's V restricted to this shard). Shared by
+    :func:`apply_cluster_mean` and the sharded ModelBank engine's fused
+    τ/qτ boundary."""
     dpc = devices_per_cluster
     if dpc == 1:
-        return params
+        return p
     groups = [list(range(c * dpc, (c + 1) * dpc))
               for c in range(num_clusters)]
     inv = 1.0 / dpc
+    return jax.tree.map(
+        lambda x: col.psum_groups(x, mesh, groups) * inv, p)
+
+
+def apply_cluster_mean(params, specs, mesh: Mesh, num_clusters: int,
+                       devices_per_cluster: int):
+    """Intra-cluster averaging via grouped psum on the flat replica axis."""
+    if devices_per_cluster == 1:
+        return params
 
     def body(p):
-        return jax.tree.map(
-            lambda x: (col.psum_groups(x.astype(jnp.float32), mesh, groups)
-                       * inv).astype(x.dtype), p)
+        q = cluster_mean_in_body(
+            mesh, jax.tree.map(lambda x: x.astype(jnp.float32), p),
+            num_clusters, devices_per_cluster)
+        return jax.tree.map(lambda x, o: o.astype(x.dtype), p, q)
     return col.shard_map(body, mesh, (specs,), specs)(params)
+
+
+def dense_mix_rows(W: jax.Array, x: jax.Array, mesh: Mesh) -> jax.Array:
+    """Row-apply an ARBITRARY dense (R, R) operator to per-device bank
+    rows inside an existing ``shard_map`` body, without ever gathering the
+    (R, T) bank: R−1 weighted cyclic rotations accumulate
+    ``y_d = Σ_j W[d, j]·x_j`` on the fly (the ``ringweight`` lowering
+    generalized to asymmetric row-stochastic operators — the
+    masked/mobility W_t of ``core.scenario``). ``x`` is this device's f32
+    row(s) ``(1, T)``; ``W`` is replicated. Traffic: (R−1)·|row| neighbor
+    bytes per device per boundary."""
+    R = col.flat_axis_size(mesh)
+    my = col.flat_axis_index(mesh)
+    if R == 1:
+        return W[0, 0] * x
+    rot = col.rotate_perm(mesh, 1)
+    Wf = W.astype(jnp.float32)
+
+    def step(s, carry):
+        acc, buf = carry
+        buf = col.ppermute(buf, mesh, rot)
+        acc = acc + Wf[my, (my + s) % R] * buf
+        return acc, buf
+
+    init = (Wf[my, my] * x, x)
+    if _unrolled():
+        acc, buf = init
+        for s in range(1, R):
+            acc, buf = step(s, (acc, buf))
+    else:
+        acc, buf = jax.lax.fori_loop(1, R, step, init)
+    return acc

@@ -61,6 +61,17 @@ class ModelBank:
         return cls(layout, n, layout.flatten_one(one_model),
                    with_residual=with_residual)
 
+    # -- placement -----------------------------------------------------------
+    def place(self, sharding) -> None:
+        """Re-place the resident buffers onto ``sharding`` — e.g. the
+        sharded engine's row sharding ``NamedSharding(mesh, P(replica,
+        None))``, under which each device holds its own contiguous
+        ``(rows_per_device, T)`` bank shard for the whole run."""
+        self.params = jax.device_put(self.params, sharding)
+        self.mom = jax.device_put(self.mom, sharding)
+        if self.residual is not None:
+            self.residual = jax.device_put(self.residual, sharding)
+
     # -- pytree edges --------------------------------------------------------
     def params_tree(self):
         """Materialize the (n, ...)-leaved pytree view (eval/ckpt edge)."""

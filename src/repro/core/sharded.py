@@ -21,7 +21,8 @@ Three aggregation backends (see ``core.gossip`` for the sparse two):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import functools
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +31,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import sharding as sh
 from repro.config import ExperimentConfig, FLConfig
+from repro.core import collectives as col
 from repro.core import gossip as gsp
-from repro.core.cefedavg import make_w_schedule, mix
+from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
 from repro.models import model as mdl
 from repro.optim import make_optimizer, make_lr_schedule
 from repro.optim.optimizers import apply_updates
@@ -283,6 +285,216 @@ class ShardedCEFedAvg:
         return (ns(self.param_specs), ns(self.opt_specs),
                 NamedSharding(self.mesh, P()),
                 NamedSharding(self.mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# sharded ModelBank engine: device-parallel flat-bank CE-FedAvg
+# ---------------------------------------------------------------------------
+
+class ShardedBankCEFedAvg(FLSimulator):
+    """Device-parallel flat-bank CE-FedAvg: the :class:`FLSimulator`
+    ModelBank engine with the ``(n, T)`` bank row-sharded over the mesh's
+    replica axes (``pod`` × ``data``) — one bank row (one paper device
+    model) per mesh device, for the whole run.
+
+    Params, momentum and the EF-residual live as contiguous per-device
+    ``(1, T)`` bank shards; the jitted global round is ONE ``shard_map``
+    whose q·τ local SGD steps run on the local row (pytree views exist
+    only inside the per-row ``apply_fn`` call) and whose mixing
+    boundaries never materialize the bank on one device:
+
+    - **static schedule** (no scenario, ``ce_fedavg``): intra-cluster
+      averaging is a grouped ``psum`` over the cluster's rows
+      (:func:`repro.core.gossip.cluster_mean_in_body`); the coincident
+      τ/qτ boundary fuses that psum with π gossip rounds of
+      :class:`repro.core.gossip.GossipSchedule`'s edge-colored
+      ``ppermute`` matchings in the same pass
+      (:func:`repro.core.gossip.gossip_in_body`) — O(π·deg·T) neighbor
+      traffic, mirroring the fused single-pass
+      ``gossip_mix_rows(W_inter @ W_intra, ·)`` boundary of the
+      single-device bank.
+    - **scenario rounds** (masked / mobility / non-gossip baselines): the
+      exact per-round dense operators are row-applied by R−1 weighted
+      cyclic rotations (:func:`repro.core.gossip.dense_mix_rows`), which
+      handles arbitrary asymmetric row-stochastic W_t.
+
+    The legacy per-leaf pytree trainer (:class:`ShardedCEFedAvg`, and
+    ``FLSimulator(bank=False)`` on one device) stays as the parity
+    oracle. Semantics — key schedule, batch draws, SGD+momentum updates,
+    mixing algebra — match the single-device ModelBank engine row for
+    row, so trajectories agree to float tolerance (asserted in
+    ``tests/test_sharded_bank.py``).
+
+    Constraints: ``fl.n`` must equal the replica-axis device count (one
+    row per device), and any ``model`` mesh axis must have size 1 (bank
+    rows are not tensor-parallel). The never-materialize guarantee
+    covers the steady-state *round*; construction currently builds the
+    bank and dataset on the default device once, then re-places them
+    (``ModelBank.place``) — per-shard in-place init (e.g.
+    ``jax.make_array_from_callback``) is what a multi-host pod would
+    need and is left for that milestone.
+    """
+
+    def __init__(self, init_fn: Callable, apply_fn: Callable, fl, data,
+                 mesh: Mesh, **kw):
+        assert kw.pop("bank", True), \
+            "ShardedBankCEFedAvg IS the bank engine; use FLSimulator or " \
+            "ShardedCEFedAvg for the pytree engines"
+        self.mesh = mesh
+        raxes = col.replica_axis_names(mesh)
+        assert raxes, f"mesh {mesh.axis_names} has no replica axes"
+        R = col.flat_axis_size(mesh)
+        assert fl.n == R, \
+            f"need one bank row per replica device: n={fl.n}, devices={R}"
+        if "model" in mesh.axis_names:
+            assert mesh.shape["model"] == 1, \
+                "bank rows are not tensor-parallel (model axis must be 1)"
+        self._rspec = raxes if len(raxes) > 1 else raxes[0]
+        self._row_sharding = NamedSharding(mesh, P(self._rspec, None))
+        placed = {}
+        for key, v in data.items():
+            spec = P(self._rspec) if key in ("xs", "ys") else P()
+            placed[key] = jax.device_put(jnp.asarray(v),
+                                         NamedSharding(mesh, spec))
+        super().__init__(init_fn, apply_fn, fl, placed, bank=True, **kw)
+        # rows are pinned to devices: no cohort compaction; scenario
+        # rounds run mask-frozen on the full (sharded) bank instead
+        self._compact_enabled = False
+        self.bank.place(self._row_sharding)
+
+    # -- the sharded round ---------------------------------------------------
+    def _build_round_compact(self):
+        """Unused: compaction would gather cohort rows across devices."""
+        return None
+
+    def _build_round_flat(self):
+        """One jitted ``shard_map`` global round over the bank shards,
+        same signature/key-schedule as the single-device flat round
+        (``FLSimulator._build_round_flat``) so ``step_round`` dispatches
+        identically. Buffers are donated: peak per-device memory stays
+        ~1× the (1, T) bank shard per resident buffer."""
+        fl = self.fl
+        n = self.sched.n
+        mesh = self.mesh
+        comp, dp = self.compression, self.dp
+        plain = comp is None and dp is None
+        with_res = self.bank.residual is not None
+        xs, ys = self.data["xs"], self.data["ys"]
+        N = xs.shape[1]
+        layout = self.bank.layout
+        batch, momentum, lr = self.batch, self.momentum, self.lr
+        dpc = fl.devices_per_cluster
+        m = fl.num_clusters
+        segments = layout.segments
+        # static ce_fedavg schedule -> structured collectives (psum +
+        # gossip matchings); anything time-varying or non-gossip -> exact
+        # dense operators via weighted rotations
+        structured = self.engine is None and fl.algorithm == "ce_fedavg"
+        gsched = (gsp.GossipSchedule.build(self.sched.H, fl.pi, dpc)
+                  if structured and m > 1 else None)
+
+        def loss_row(row, x, y):
+            return self._loss(layout.unflatten_one(row), x, y)
+        grad_row = jax.grad(loss_row)
+
+        def intra(Y, W_intra):
+            if structured:
+                return gsp.cluster_mean_in_body(mesh, Y, m, dpc)
+            return gsp.dense_mix_rows(W_intra, Y, mesh)
+
+        def final(Y, W_final):
+            # W_final is W_inter@W_intra (plain, fused) or W_inter
+            # (upload path); structurally both reduce to cluster-mean
+            # then π gossip rounds, since V is idempotent and W_inter
+            # itself starts with the cluster average (eq. 11's B^T…B)
+            if structured:
+                Y = gsp.cluster_mean_in_body(mesh, Y, m, dpc)
+                if gsched is not None:
+                    Y = gsp.gossip_in_body(gsched, mesh, Y)
+                return Y
+            return gsp.dense_mix_rows(W_final, Y, mesh)
+
+        def upload_row(d_row, r_row, key, my):
+            """Device-side upload transform of the LOCAL delta row —
+            same per-row key schedule as the single-device engine
+            (row i of split(key, n)), so uploads are bit-matched."""
+            if dp is not None and dp.enabled:
+                from repro.core.privacy import privatize_update_flat
+                keys = jax.random.split(key, n)
+                d_row = privatize_update_flat(d_row, dp, keys[my])
+            if comp is not None and comp.kind != "none":
+                from repro.core.compress import compress_flat
+                keys = jax.random.split(jax.random.fold_in(key, 1), n)
+                d_row, r_row = compress_flat(comp, d_row, r_row, keys[my],
+                                             segments)
+            return d_row, r_row
+
+        def body(*args):
+            if with_res:
+                Y, M, Rres, key, W_intra, W_final, mask, xs_l, ys_l = args
+            else:
+                Y, M, key, W_intra, W_final, mask, xs_l, ys_l = args
+                Rres = None
+            my = col.flat_axis_index(mesh)
+            act = jax.lax.dynamic_slice_in_dim(
+                (mask > 0.5)[:, None], my, 1, 0)          # (1, 1)
+            x0, y0 = xs_l[0], ys_l[0]
+
+            def local_step(carry, k):
+                Y, M = carry
+                idx = jax.random.randint(k, (n, batch), 0, N)
+                ib = jax.lax.dynamic_slice_in_dim(idx, my, 1, 0)[0]
+                G = grad_row(Y[0], x0[ib], y0[ib])[None]
+                M = jnp.where(act, momentum * M + G, M)
+                Y = jnp.where(act, Y - lr * M, Y)
+                return (Y, M), None
+
+            def train_tau(Y, M, k1):
+                keys = jax.random.split(k1, fl.tau)
+                (Y, M), _ = jax.lax.scan(local_step, (Y, M), keys)
+                return Y, M
+
+            keys = jax.random.split(key, fl.q)
+            if plain:
+                def qbody(carry, k1):
+                    Y, M = carry
+                    Y, M = train_tau(Y, M, k1)
+                    return (intra(Y, W_intra), M), None
+                if fl.q > 1:
+                    (Y, M), _ = jax.lax.scan(qbody, (Y, M), keys[:-1])
+                Y, M = train_tau(Y, M, keys[-1])
+                Y = final(Y, W_final)                 # fused τ∘qτ boundary
+                return (Y, M, Rres) if with_res else (Y, M)
+
+            def qbody(carry, k1):
+                Y0, M, Rr = carry
+                Y, M = train_tau(Y0, M, k1)
+                d_row, r_row = upload_row(
+                    (Y - Y0)[0], None if Rr is None else Rr[0],
+                    jax.random.fold_in(k1, 7), my)
+                Rr = Rr if r_row is None else r_row[None]
+                Y = Y0 + intra(d_row[None], W_intra)
+                return (Y, M, Rr), None
+            (Y, M, Rres), _ = jax.lax.scan(qbody, (Y, M, Rres), keys)
+            Y = final(Y, W_final)                     # W_inter on this path
+            return (Y, M, Rres) if with_res else (Y, M)
+
+        row = P(self._rspec, None)
+        rep = P()
+        nbank = 3 if with_res else 2
+        in_specs = (row,) * nbank + (rep,) * 4 + (P(self._rspec),) * 2
+        out_specs = (row,) * nbank
+        mapped = col.shard_map(body, mesh, in_specs, out_specs)
+
+        @functools.partial(jax.jit,
+                           donate_argnums=(0, 1, 2) if with_res else (0, 1))
+        def global_round(Y, M, R, key, W_intra, W_final, mask):
+            if with_res:
+                return mapped(Y, M, R, key, W_intra, W_final, mask, xs, ys)
+            Y, M = mapped(Y, M, key, W_intra, W_final, mask, xs, ys)
+            return Y, M, R
+
+        return global_round
 
 
 # ---------------------------------------------------------------------------

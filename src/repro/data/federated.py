@@ -11,7 +11,7 @@ sufficient to reproduce the paper's *relative* algorithm orderings.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

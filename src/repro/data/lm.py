@@ -7,7 +7,7 @@ to how distinct the per-cluster transition matrices are).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

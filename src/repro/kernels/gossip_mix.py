@@ -162,6 +162,13 @@ class FlatLayout:
         flat-domain upload transforms (top-k, int8) preserve."""
         return tuple(zip(self.offsets, self.sizes))
 
+    @property
+    def row_nbytes(self) -> int:
+        """Bytes of one f32 bank row (= one device model = one per-device
+        bank shard of the sharded engine, and the |θ| multiplier in every
+        boundary-traffic formula of docs/PERFORMANCE.md)."""
+        return 4 * self.total
+
     # -- constructors (memoized) --------------------------------------------
     @classmethod
     def _build(cls, tree, strip_leading: bool) -> "FlatLayout":

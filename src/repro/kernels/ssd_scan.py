@@ -12,7 +12,6 @@ Validated on CPU with interpret=True against kernels/ref.py.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -32,6 +32,28 @@ def make_mesh(shape, axes) -> Mesh:
     return Mesh(dev, axes)
 
 
+def make_replica_mesh(num_replicas: int, *, pods: int = 1) -> Mesh:
+    """Mesh for the sharded ModelBank engine: one bank row per device on
+    the replica axes, model axis fixed at 1 (bank rows are not
+    tensor-parallel). ``pods > 1`` adds a leading ``pod`` axis so
+    multi-pod edge crossings are exercised (replica id =
+    ``pod_idx * data_size + data_idx``)."""
+    devices = jax.devices()
+    if len(devices) < num_replicas:
+        raise RuntimeError(
+            f"need {num_replicas} devices for {num_replicas} bank rows, "
+            f"have {len(devices)}; run under XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_replicas}")
+    assert num_replicas % pods == 0, (num_replicas, pods)
+    if pods > 1:
+        shape: tuple = (pods, num_replicas // pods, 1)
+        axes: tuple = ("pod", "data", "model")
+    else:
+        shape, axes = (num_replicas, 1), ("data", "model")
+    dev = np.asarray(devices[:num_replicas]).reshape(shape)
+    return Mesh(dev, axes)
+
+
 def initialize_multihost(coordinator_address: str | None = None,
                          num_processes: int | None = None,
                          process_id: int | None = None) -> None:

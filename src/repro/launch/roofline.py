@@ -17,7 +17,7 @@ all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Iterable, Tuple
+from typing import Any, Dict
 
 PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # bytes/s

@@ -7,7 +7,7 @@ patch embeddings, both already at d_model width.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

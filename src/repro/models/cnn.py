@@ -13,7 +13,7 @@ so apply fns take (params, images) and return logits.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

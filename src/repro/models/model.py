@@ -14,7 +14,6 @@ dry-run on a CPU host).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -9,7 +9,7 @@ they compose with vmap over the federated replica axis.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ production mesh.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np

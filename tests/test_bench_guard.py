@@ -1,0 +1,67 @@
+"""The CI perf regression guard (benchmarks/check_regression.py): the
+guarded derived ratios exist in the committed baseline, and the
+floor/ceiling semantics catch regressions without flagging the
+overhead-dominated smoke shapes."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import CHECKS, check, derived_field, main
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BASELINE = os.path.join(REPO, "BENCH_pr3.json")
+
+
+def _rec(name, derived):
+    return {"name": name, "us_per_call": 1.0, "derived": derived}
+
+
+def _smoke(speedup, ratio):
+    return [
+        _rec("kern_boundary_fused_femnist_cnn_n16",
+             f"bank qt-boundary;speedup_vs_perleaf={speedup}x"),
+        _rec("kern_compaction_ratio_mlp_smoke",
+             f"half/full_round_time={ratio};blurb"),
+    ]
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def test_baseline_has_all_guarded_fields(baseline):
+    for field, base_name, _, _ in CHECKS:
+        assert derived_field(baseline, base_name, field) > 0
+
+
+def test_healthy_smoke_passes(baseline):
+    failures, _ = check(_smoke(1.85, 1.39), baseline, 2.5)
+    assert failures == []
+
+
+def test_lost_fusion_speedup_fails(baseline):
+    """Fused boundary degrading to the per-leaf baseline (speedup ~1x
+    while the committed baseline is 3.26x) must fail the floor check."""
+    failures, _ = check(_smoke(0.9, 1.39), baseline, 2.5)
+    assert failures == ["speedup_vs_perleaf"]
+
+
+def test_compaction_blowup_fails(baseline):
+    """A half-cohort round costing >2.5x the full round (per-round
+    recompiles, duplicated gradient work) must fail the ceiling check."""
+    failures, _ = check(_smoke(1.85, 3.1), baseline, 2.5)
+    assert failures == ["half/full_round_time"]
+
+
+def test_missing_record_is_an_error(baseline, tmp_path, capsys):
+    smoke = tmp_path / "smoke.json"
+    smoke.write_text(json.dumps(_smoke(1.85, 1.39)[:1]))
+    rc = main(["--smoke", str(smoke), "--baseline", BASELINE])
+    assert rc == 1
+    assert "missing bench record" in capsys.readouterr().out

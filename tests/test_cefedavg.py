@@ -4,10 +4,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import FLConfig
-from repro.core import topology as topo
 from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
 from repro.data.federated import (build_fl_data, dirichlet_partition,
                                   make_synthetic_classification)

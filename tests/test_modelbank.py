@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.config import FLConfig, ScenarioConfig
-from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
+from repro.core.cefedavg import FLSimulator, mix
 from repro.core.compress import (CompressionConfig, compress_flat,
                                  compress_tree)
 from repro.core.modelbank import (ModelBank, bucket_for, cohort_buckets,

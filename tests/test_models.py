@@ -88,7 +88,6 @@ def test_decode_matches_forward(arch):
         enc_logits = None
         from repro.models import layers as Lmod
         enc = batch["frames"].astype(jnp.float32)
-        import math
         from repro.models.model import _sinusoidal, _scan
         enc = enc + _sinusoidal(jnp.arange(enc.shape[1]),
                                 cfg.d_model)[None].astype(enc.dtype)

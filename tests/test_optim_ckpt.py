@@ -1,5 +1,4 @@
 """Optimizers, LR schedules, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp

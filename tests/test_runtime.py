@@ -1,5 +1,4 @@
 """Runtime model (eq. 8) + Theorem-1 bound sanity checks."""
-import numpy as np
 import pytest
 
 from repro.core.runtime import (HardwareProfile, RuntimeModel,

@@ -157,6 +157,24 @@ assert mx < 5e-3, mx
     assert "MAXDIFF" in out
 
 
+def test_sharded_bank_multidevice_lane():
+    """Single-device fallback for the in-process ``multidevice`` tests
+    (tests/test_sharded_bank.py): run them exactly as the CI multidevice
+    lane does — one pytest subprocess with 8 forced host devices — so
+    tier-1 on a single-device host still exercises bank-shard parity."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    test_file = os.path.join(os.path.dirname(__file__),
+                             "test_sharded_bank.py")
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", "-m", "multidevice",
+         test_file],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "skipped" not in out.stdout.splitlines()[-1], out.stdout
+
+
 def test_baseline_algorithms_lower():
     out = _run(COMMON + """
 mesh = Mesh(np.asarray(jax.devices()).reshape(8, 1), ("data", "model"))

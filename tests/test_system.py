@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import FLConfig
 from repro.core.cefedavg import FLSimulator
