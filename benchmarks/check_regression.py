@@ -23,44 +23,70 @@ baseline with a generous tolerance:
 Exit code 1 on any regression or missing record; the smoke JSON is also
 uploaded as a workflow artifact for the perf trajectory.
 
+``--baseline`` defaults to the NEWEST committed ``BENCH_<tag>.json``
+(highest pr-number tag), so landing a new trajectory point automatically
+becomes the next guard baseline without touching CI.
+
   PYTHONPATH=src python -m benchmarks.check_regression \\
-      --smoke bench_smoke.json --baseline BENCH_pr3.json --tolerance 2.5
+      --smoke bench_smoke.json [--baseline BENCH_pr3.json] --tolerance 2.5
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import re
 import sys
 
-# guarded metrics: (derived field, baseline record, smoke record, mode)
+# guarded metrics: (derived field, baseline records, smoke record, mode)
 #   floor    smoke >= baseline / tol          (higher is better)
 #   ceiling  smoke <= max(1, baseline) * tol  (lower is better, smoke
 #            shapes may legitimately sit near 1)
 # The boundary benchmark runs at the real FEMNIST bank size even under
 # --smoke (the fused-pass advantage is scale-dependent), so its record
-# name matches the baseline's; only the compaction rounds shrink.
+# name matches the baseline's; only the compaction rounds shrink — a
+# baseline may therefore carry either the full-shape or the smoke-shape
+# compaction record (full-lane BENCH_pr3 vs smoke-lane BENCH_pr5), so
+# the baseline lookup takes candidates in preference order.
 CHECKS = (
-    ("speedup_vs_perleaf", "kern_boundary_fused_femnist_cnn_n16",
+    ("speedup_vs_perleaf", ("kern_boundary_fused_femnist_cnn_n16",),
      "kern_boundary_fused_femnist_cnn_n16", "floor"),
-    ("half/full_round_time", "kern_compaction_ratio_femnist_cnn",
+    ("half/full_round_time", ("kern_compaction_ratio_femnist_cnn",
+                              "kern_compaction_ratio_mlp_smoke"),
      "kern_compaction_ratio_mlp_smoke", "ceiling"),
 )
 
 _NUM = r"([-+0-9.eE]+)"
 
 
-def derived_field(records, name: str, field: str) -> float:
-    """Numeric ``field=<value>`` from record ``name``'s derived string."""
+def derived_field(records, name, field: str) -> float:
+    """Numeric ``field=<value>`` from the first present record of
+    ``name`` (a record name, or a preference-ordered tuple of them)."""
+    names = (name,) if isinstance(name, str) else tuple(name)
     by_name = {r["name"]: r for r in records}
-    if name not in by_name:
-        raise KeyError(f"record {name!r} missing "
+    hit = next((n for n in names if n in by_name), None)
+    if hit is None:
+        raise KeyError(f"record {names!r} missing "
                        f"(have {sorted(by_name)})")
-    derived = by_name[name]["derived"]
+    derived = by_name[hit]["derived"]
     m = re.search(re.escape(field) + "=" + _NUM, derived)
     if not m:
-        raise KeyError(f"field {field!r} missing from {name!r}: {derived}")
+        raise KeyError(f"field {field!r} missing from {hit!r}: {derived}")
     return float(m.group(1))
+
+
+def newest_baseline(root: str = ".") -> str:
+    """The newest committed ``BENCH_<tag>.json`` in ``root`` — highest
+    ``pr<N>`` number first, lexicographic tag as a fallback."""
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        raise FileNotFoundError(f"no BENCH_*.json under {root!r}")
+
+    def rank(p):
+        m = re.search(r"BENCH_pr(\d+)\.json$", os.path.basename(p))
+        return (1, int(m.group(1)), p) if m else (0, -1, p)
+    return max(paths, key=rank)
 
 
 def check(smoke_records, baseline_records, tolerance: float):
@@ -88,10 +114,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", required=True,
                     help="bench_smoke.json from benchmarks.run --smoke")
-    ap.add_argument("--baseline", default="BENCH_pr3.json",
-                    help="committed perf-trajectory baseline")
+    ap.add_argument("--baseline", default=None,
+                    help="committed perf-trajectory baseline (default: "
+                         "the newest BENCH_*.json in the repo root)")
     ap.add_argument("--tolerance", type=float, default=2.5)
     args = ap.parse_args(argv)
+    if args.baseline is None:
+        args.baseline = newest_baseline(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        print(f"baseline: {args.baseline}")
     with open(args.smoke) as f:
         smoke = json.load(f)
     with open(args.baseline) as f:

@@ -52,7 +52,7 @@ def make_data(fl: FLConfig, *, full: bool = False, cluster_iid=None,
 
 
 def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
-             seed: int = 0, scenario=None, bank: bool = True,
+             seed: int = 0, scenario=None, schedule=None, bank: bool = True,
              batch_size: int = 16) -> FLSimulator:
     if full:
         init = lambda k: init_femnist_cnn(k)            # noqa: E731
@@ -62,7 +62,8 @@ def make_sim(fl: FLConfig, data, *, full: bool = False, lr: float = 0.1,
                                              MLP_CLASSES)
         apply = apply_mlp_classifier
     return FLSimulator(init, apply, fl, data, lr=lr, batch_size=batch_size,
-                       seed=seed, scenario=scenario, bank=bank)
+                       seed=seed, scenario=scenario, schedule=schedule,
+                       bank=bank)
 
 
 def paper_runtime(fl: FLConfig, *, full: bool = False) -> RuntimeModel:

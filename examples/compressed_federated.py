@@ -46,16 +46,16 @@ def run(compression=None, dp=None, rounds=8):
     return hist["acc"][-1], t
 
 
-def main():
+def main(rounds: int = 8):
     print(f"{'variant':24s} {'final_acc':>9s} {'round_s':>9s} {'notes'}")
-    acc, t = run()
+    acc, t = run(rounds=rounds)
     print(f"{'exact (f32 uplink)':24s} {acc:9.3f} {t:9.1f}")
-    acc, t = run(CompressionConfig('int8'))
+    acc, t = run(CompressionConfig('int8'), rounds=rounds)
     print(f"{'int8 uplink (4x)':24s} {acc:9.3f} {t:9.1f}")
-    acc, t = run(CompressionConfig('topk', topk_frac=0.05))
+    acc, t = run(CompressionConfig('topk', topk_frac=0.05), rounds=rounds)
     print(f"{'topk 5% + err-feedback':24s} {acc:9.3f} {t:9.1f}")
     dp = DPConfig(clip_norm=1.0, noise_multiplier=0.5)
-    acc, t = run(dp=dp)
+    acc, t = run(dp=dp, rounds=rounds)
     print(f"{'local DP (sigma=0.5)':24s} {acc:9.3f} {t:9.1f} "
           f"eps~{gaussian_epsilon(0.5):.1f} per release")
 

@@ -27,8 +27,11 @@ from repro.models.cnn import (apply_mlp_classifier,  # noqa: E402
                               init_mlp_classifier)
 
 
-def main():
-    target = 0.9
+def main(rounds: int = 8, target: float = 0.9, schedule=None):
+    """``rounds``/``target`` are exposed so the example smoke test can
+    dry-run one round; ``schedule`` accepts a ``core.program`` schedule
+    name (e.g. "adaptive_tau") to run CE-FedAvg on a non-canonical
+    RoundProgram — see docs/SCENARIOS.md."""
     print("=== CFEL quickstart: 16 devices, 4 edge servers, ring backhaul")
     results = {}
     rt = paper_runtime_model()
@@ -44,8 +47,10 @@ def main():
                 build_fl_data(x, y, parts, tx, ty, 64).items()}
         sim = FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 8),
                           apply_mlp_classifier, fl, data, lr=0.1,
-                          batch_size=16)
-        hist = run_wall_clock(sim, rt, 8)
+                          batch_size=16,
+                          schedule=schedule if algo == "ce_fedavg"
+                          else None)
+        hist = run_wall_clock(sim, rt, rounds)
         tta = time_to_accuracy(hist, target)
         results[algo] = tta
         print(f"  {algo:13s} final_acc={hist['acc'][-1]:.3f} "

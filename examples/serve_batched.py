@@ -11,9 +11,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch.serve import main as serve_main  # noqa: E402
 
-if __name__ == "__main__":
-    for arch in ("mamba2-2.7b", "qwen2-0.5b"):
+
+def main(archs=("mamba2-2.7b", "qwen2-0.5b")):
+    for arch in archs:
         print(f"\n=== serving {arch} (reduced) ===")
         serve_main(["--arch", arch, "--reduced", "--batch", "2",
                     "--prompt-len", "16", "--decode-tokens", "8",
                     "--max-seq", "64"])
+
+
+if __name__ == "__main__":
+    main()

@@ -27,9 +27,10 @@ from repro.models.cnn import (apply_mlp_classifier,  # noqa: E402
 MODEL_BITS = 6_603_710 * 32.0      # the paper's FEMNIST CNN, fp32
 
 
-def main():
+def main(rounds: int = 6):
+    acc_col = f"acc@{rounds}"
     print(f"{'topology':12s} {'pi':>3s} {'zeta':>6s} {'Omega1':>8s} "
-          f"{'Omega2':>8s} {'acc@6':>6s} {'sparse_MB':>9s} "
+          f"{'Omega2':>8s} {acc_col:>6s} {'sparse_MB':>9s} "
           f"{'exact_MB':>8s} {'dense_MB':>8s}")
     for topo, pi in [("ring", 1), ("ring", 10), ("erdos_renyi", 1),
                      ("complete", 1)]:
@@ -44,7 +45,7 @@ def main():
         sim = FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 8),
                           apply_mlp_classifier, fl, data, lr=0.1,
                           batch_size=16)
-        hist = sim.run(6)
+        hist = sim.run(rounds)
         z = sched.zeta
         # what this backhaul costs each sharded gossip backend per round
         mb = {}

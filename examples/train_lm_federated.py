@@ -24,14 +24,16 @@ from repro.core.sharded import ShardedCEFedAvg  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=50)  # 200 local steps
     ap.add_argument("--tau", type=int, default=2)
     ap.add_argument("--q", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + 2 rounds (the example smoke test)")
+    args = ap.parse_args(argv)
 
     # ~100M-param config: qwen2-0.5b family at modest width/depth
     cfg = dataclasses.replace(
@@ -39,6 +41,9 @@ def main():
         num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
         d_ff=3072, head_dim=64, vocab_size=32000,
         dtype="float32", param_dtype="float32")
+    if args.smoke:
+        cfg = get_model_config("qwen2-0.5b").reduced()
+        args.rounds, args.seq, args.batch = 2, 32, 2
     mesh = make_mesh((1, 1), ("data", "model"))  # 1 CPU device
     exp = ExperimentConfig(
         model=cfg,

@@ -153,6 +153,15 @@ class FLConfig:
     def n(self) -> int:
         return self.num_clusters * self.devices_per_cluster
 
+    def round_program(self, *, privatize: bool = False,
+                      compress: bool = False):
+        """Compile this config's τ/q/π knobs into the canonical
+        :class:`repro.core.program.RoundProgram` — the declarative round
+        schedule every engine lowers (see ``core/program.py``)."""
+        from repro.core.program import canonical_program
+        return canonical_program(self, privatize=privatize,
+                                 compress=compress)
+
     def validate(self) -> None:
         assert self.algorithm in (
             "ce_fedavg", "fedavg", "hier_favg", "local_edge", "dec_local_sgd")

@@ -24,6 +24,16 @@ Two interchangeable engines live behind the same ``FLSimulator`` API:
 - **legacy pytree (``bank=False``)** — per-leaf ``tensordot`` mixing and
   full-n ``where``-frozen local steps; kept as the bit-faithful parity
   reference (``tests/test_modelbank.py``).
+
+Both engines (and the sharded bank in ``core/sharded.py``) execute one
+shared declarative schedule: a :class:`repro.core.program.RoundProgram`.
+The static τ/q/π knobs compile to the canonical program
+(``program.canonical_program``); ``_lower_legacy`` / ``_lower_flat`` /
+``_lower_compact`` are *compilers* from any validated program to that
+engine's jitted round, and a ``schedule=`` hook (a name from
+``program.SCHEDULES``, a ``ScheduleFn``, or a fixed ``RoundProgram``)
+swaps in non-canonical schedules — adaptive per-cluster τ_k,
+time-varying π_t — without touching engine code.
 """
 from __future__ import annotations
 
@@ -36,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import FLConfig
+from repro.core import program as prg
 from repro.core import topology as topo
 from repro.core.modelbank import ModelBank, cohort_buckets, compact_plan
 from repro.kernels.gossip_mix import gossip_mix_rows
@@ -122,6 +133,10 @@ class FLSimulator:
     scenario: optional config.ScenarioConfig — per-round client sampling,
           straggler dropout and device mobility (core/scenario.py); pair
           with core.clock.run_wall_clock for time-to-accuracy curves.
+    schedule: optional round schedule override — a name from
+          ``program.SCHEDULES`` ("static", "adaptive_tau", "pi_decay"),
+          a ``program.ScheduleFn``, or a fixed ``program.RoundProgram``.
+          None runs the canonical program compiled from fl's τ/q/π.
     bank: True (default) runs the flat ModelBank engine; False the legacy
           per-leaf pytree engine (parity/debug escape hatch). ``params``,
           ``mom`` and ``residual`` read/write as pytrees in both modes.
@@ -130,7 +145,7 @@ class FLSimulator:
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl: FLConfig,
                  data: Dict[str, Any], *, lr: float = 0.05,
                  momentum: float = 0.9, batch_size: int = 50, seed: int = 0,
-                 compression=None, dp=None, scenario=None,
+                 compression=None, dp=None, scenario=None, schedule=None,
                  bank: bool = True):
         self.fl = fl
         self.apply_fn = apply_fn
@@ -151,12 +166,6 @@ class FLSimulator:
         # current cluster assignment B_t (mobility re-draws it per round)
         self.labels = np.repeat(np.arange(fl.num_clusters),
                                 fl.devices_per_cluster)
-        self._W_intra_j = jnp.asarray(self.sched.W_intra, jnp.float32)
-        self._W_inter_j = jnp.asarray(self.sched.W_inter, jnp.float32)
-        # the coincident τ/qτ boundary folded into one operator — the
-        # fused single-pass form the ModelBank engine applies
-        self._W_comb_j = jnp.asarray(
-            self.sched.W_inter @ self.sched.W_intra, jnp.float32)
         self._full_mask = jnp.ones((n,), jnp.float32)
         with_residual = (compression is not None
                          and compression.error_feedback)
@@ -173,16 +182,37 @@ class FLSimulator:
             self.bank = ModelBank.from_model(one, n,
                                              with_residual=with_residual)
             self._buckets = cohort_buckets(n)
-            self._round_flat = self._build_round_flat()
-            self._round_compact = self._build_round_compact()
         else:
             self._params = jax.tree.map(
                 lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), one)
             self._mom = jax.tree.map(jnp.zeros_like, self._params)
             self._residual = (jax.tree.map(jnp.zeros_like, self._params)
                               if with_residual else None)
-            self._round = self._build_round()
         self.last_bucket = n   # cohort capacity used by the latest round
+        # -- round schedule (RoundProgram IR) -------------------------------
+        # every engine round is a lowering of a RoundProgram; the static
+        # τ/q/π knobs compile to the canonical program once, and a
+        # schedule hook may swap in a different program each round
+        self._canonical = prg.canonical_program(
+            fl, privatize=dp is not None, compress=compression is not None)
+        if schedule is None:
+            self._schedule_fn: Optional[prg.ScheduleFn] = None
+        elif isinstance(schedule, str):
+            self._schedule_fn = prg.make_schedule(
+                schedule, fl, engine=self.engine,
+                privatize=dp is not None, compress=compression is not None)
+        elif isinstance(schedule, prg.RoundProgram):
+            def _fixed(r, plan, _program=schedule):
+                return _program
+            self._schedule_fn = _fixed
+        else:
+            self._schedule_fn = schedule
+        self.round_index = 0
+        self.last_program: Optional[prg.RoundProgram] = None
+        self._lowered: Dict = {}       # (engine kind, signature) -> jitted
+        self._static_mats: Dict = {}   # (fuse, signature) -> resolved mats
+        self._inter_static: Dict = {fl.pi: self.sched.W_inter}
+        self._static_labels = self.labels.copy()
         self.key = jax.random.PRNGKey(seed + 1)
         self._eval_fn = self._build_eval()
 
@@ -242,53 +272,67 @@ class FLSimulator:
         picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
         return jnp.mean(lse - picked)
 
-    # -- one global round, jitted (legacy pytree engine) --------------------
-    def _build_round(self):
-        """The legacy jitted global round. W_intra/W_inter/mask are
-        *arguments* (not closure constants) so the scenario engine can
-        re-draw them between rounds without recompiling: masked devices
-        take no local steps (their params and momentum are frozen via
-        ``where``) and the operators are whatever (possibly
-        unequal/masked) matrices the caller passes — the static schedule
-        with a full mask reproduces the original fixed-schedule round
-        bit-for-bit."""
-        fl = self.fl
+    # -- program lowering: legacy pytree engine -----------------------------
+    def _lower_legacy(self, program: prg.RoundProgram):
+        """Compile a RoundProgram to the legacy pytree round (fuse=False:
+        one per-leaf ``mix`` contraction per mix op, the paper-literal
+        sequential form). Operators/mask are *arguments* so the scenario
+        engine can re-draw them between rounds without recompiling:
+        masked devices (and, past their ``tau_dev`` cutoff, adaptive
+        devices) are frozen via ``where``; the canonical program with a
+        full mask reproduces the original fixed-schedule round."""
         n = self.sched.n
         N = self.data["xs"].shape[1]
         grad_fn = jax.grad(self._loss)
+        comp, dp = self.compression, self.dp
+        plans = prg.lowering_plan(program, fuse=False)
+        runs = prg.block_runs(plans)
+        nblocks = len(plans)
 
         def bcast(act, leaf):
             return act.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
-        def make_local_step(act):
-            def local_step(carry, key):
+        def make_local_step(op, act, tau_dev):
+            lr = self.lr * op.lr_scale
+
+            def local_step(carry, xs_):
+                if op.adaptive:
+                    key, s = xs_
+                    stepact = act & (s < tau_dev)
+                else:
+                    key, stepact = xs_, act
                 params, mom = carry
                 idx = jax.random.randint(key, (n, self.batch), 0, N)
                 xb = jax.vmap(lambda x, i: x[i])(self.data["xs"], idx)
                 yb = jax.vmap(lambda y, i: y[i])(self.data["ys"], idx)
                 grads = jax.vmap(grad_fn)(params, xb, yb)
                 mom = jax.tree.map(
-                    lambda v, g: jnp.where(bcast(act, v),
+                    lambda v, g: jnp.where(bcast(stepact, v),
                                            self.momentum * v + g, v),
                     mom, grads)
                 params = jax.tree.map(
-                    lambda p, v: jnp.where(bcast(act, p),
-                                           p - self.lr * v, p),
+                    lambda p, v: jnp.where(bcast(stepact, p),
+                                           p - lr * v, p),
                     params, mom)
                 return (params, mom), None
             return local_step
 
-        comp, dp = self.compression, self.dp
+        def train_block(params, mom, key, op, act, tau_dev):
+            local_step = make_local_step(op, act, tau_dev)
+            keys = jax.random.split(key, op.tau)
+            xs_ = (keys, jnp.arange(op.tau)) if op.adaptive else keys
+            (params, mom), _ = jax.lax.scan(local_step, (params, mom), xs_)
+            return params, mom
 
-        def upload_transform(delta, residual, key):
+        def upload_transform(delta, residual, key, bp):
             """Device-side: (optional) DP then compression of the delta."""
-            if dp is not None and dp.enabled:
+            if bp.privatize and dp is not None and dp.enabled:
                 from repro.core.privacy import privatize_update
                 keys = jax.random.split(key, n)
                 delta = jax.vmap(
                     lambda d, k: privatize_update(d, dp, k))(
                         delta, keys)
-            if comp is not None and comp.kind != "none":
+            if bp.compress and comp is not None and comp.kind != "none":
                 from repro.core.compress import compress_tree
                 keys = jax.random.split(jax.random.fold_in(key, 1), n)
                 delta, residual = jax.vmap(
@@ -296,41 +340,55 @@ class FLSimulator:
                 )(delta, residual, keys)
             return delta, residual
 
-        def make_edge_round(W_intra, act):
-            local_step = make_local_step(act)
-
-            def edge_round(carry, key):
-                params0, mom, residual = carry
-                keys = jax.random.split(key, fl.tau)
-                (params, mom), _ = jax.lax.scan(local_step, (params0, mom),
-                                                keys)
-                if comp is None and dp is None:
-                    params = mix(W_intra, params)
-                else:
-                    # devices upload (privatized/compressed) deltas; the edge
-                    # reconstructs x_start + V·delta (exact when both are off)
-                    delta = jax.tree.map(lambda a, b: a - b, params, params0)
-                    delta, residual = upload_transform(
-                        delta, residual, jax.random.fold_in(key, 7))
-                    params = jax.tree.map(
-                        lambda p0, d: p0 + d, params0, mix(W_intra, delta))
-                return (params, mom, residual), None
-            return edge_round
+        def run_block(bp, gm, params, mom, residual, k1, act, tau_dev):
+            if not bp.upload:
+                params, mom = train_block(params, mom, k1, bp.local, act,
+                                          tau_dev)
+                for W in gm:
+                    params = mix(W, params)
+                return params, mom, residual
+            # devices upload (privatized/compressed) deltas; the edge
+            # reconstructs x_start + V·delta (exact when both are off)
+            params0 = params
+            params, mom = train_block(params, mom, k1, bp.local, act,
+                                      tau_dev)
+            delta = jax.tree.map(lambda a, b: a - b, params, params0)
+            delta, residual = upload_transform(
+                delta, residual, jax.random.fold_in(k1, 7), bp)
+            params = jax.tree.map(
+                lambda p0, d: p0 + d, params0, mix(gm[0], delta))
+            for W in gm[1:]:
+                params = mix(W, params)
+            return params, mom, residual
 
         @jax.jit
-        def global_round(params, mom, residual, key, W_intra, W_inter,
-                         mask):
+        def global_round(params, mom, residual, key, args, mask):
             act = mask > 0.5
-            edge_round = make_edge_round(W_intra, act)
-            keys = jax.random.split(key, fl.q)
-            (params, mom, residual), _ = jax.lax.scan(
-                edge_round, (params, mom, residual), keys)
-            params = mix(W_inter, params)
+            tau_dev = args.tau_dev
+            keys = jax.random.split(key, nblocks)
+            mi = ki = 0
+            for bp, count in runs:
+                gm = args.mats[mi:mi + len(bp.groups)]
+                mi += len(bp.groups)
+                bkeys = keys[ki:ki + count]
+                ki += count
+                if count > 1:
+                    def body(carry, k1, bp=bp, gm=gm):
+                        p, m, r = carry
+                        p, m, r = run_block(bp, gm, p, m, r, k1, act,
+                                            tau_dev)
+                        return (p, m, r), None
+                    (params, mom, residual), _ = jax.lax.scan(
+                        body, (params, mom, residual), bkeys)
+                else:
+                    params, mom, residual = run_block(
+                        bp, gm, params, mom, residual, bkeys[0], act,
+                        tau_dev)
             return params, mom, residual
 
         return global_round
 
-    # -- one global round, jitted (flat ModelBank engine) -------------------
+    # -- program lowering: flat ModelBank engine ----------------------------
     def _flat_helpers(self):
         """Local-step factory shared by the flat rounds; the per-row grad
         closure materializes pytree views only inside the apply call."""
@@ -342,11 +400,21 @@ class FLSimulator:
             return self._loss(layout.unflatten_one(row), x, y)
         grad_row = jax.grad(loss_row)
 
-        def make_local_step(xs, ys, act2d, gather=None):
+        def make_local_step(xs, ys, act2d, gather=None, tau_dev=None,
+                            lr_scale=1.0):
             """One SGD+momentum step on a (rows, T) slab. ``gather``
             (compaction) maps the full-n batch-index draw onto the slab's
-            rows so the cohort sees the same batches as the full path."""
-            def local_step(carry, key):
+            rows so the cohort sees the same batches as the full path;
+            ``tau_dev`` (adaptive programs) freezes each row past its
+            per-device step cutoff."""
+            lr = self.lr * lr_scale
+
+            def local_step(carry, xs_):
+                if tau_dev is not None:
+                    key, s = xs_
+                    act = act2d & (s < tau_dev[:, None])
+                else:
+                    key, act = xs_, act2d
                 Y, M = carry
                 idx = jax.random.randint(key, (n, self.batch), 0, N)
                 if gather is not None:
@@ -354,45 +422,50 @@ class FLSimulator:
                 xb = jax.vmap(lambda x, i: x[i])(xs, idx)
                 yb = jax.vmap(lambda y, i: y[i])(ys, idx)
                 G = jax.vmap(grad_row)(Y, xb, yb)
-                M = jnp.where(act2d, self.momentum * M + G, M)
-                Y = jnp.where(act2d, Y - self.lr * M, Y)
+                M = jnp.where(act, self.momentum * M + G, M)
+                Y = jnp.where(act, Y - lr * M, Y)
                 return (Y, M), None
             return local_step
 
         return make_local_step
 
-    def _build_round_flat(self):
-        """The flat global round: all state stays (n, T); each mixing
-        boundary is one streaming pass (``gossip_mix_rows``); the final
-        τ-boundary, which coincides with the qτ-boundary, is fused into
-        a single pass with the precomputed ``W_final = W_inter @ W_intra``
-        (the caller passes plain ``W_inter`` on the delta/upload path,
-        where the two applications cannot be folded). Buffers are donated
-        so peak memory stays ~1× the bank."""
-        fl = self.fl
+    @staticmethod
+    def _train_scan(local_step, Y, M, key, op):
+        """τ local steps of one block: scan over the block's step keys
+        (plus the step index when the op is adaptive)."""
+        keys = jax.random.split(key, op.tau)
+        xs_ = (keys, jnp.arange(op.tau)) if op.adaptive else keys
+        (Y, M), _ = jax.lax.scan(local_step, (Y, M), xs_)
+        return Y, M
+
+    def _lower_flat(self, program: prg.RoundProgram):
+        """Compile a RoundProgram to the flat global round: all state
+        stays (n, T); each MixGroup is one streaming pass
+        (``gossip_mix_rows``) of its fused operator — for the canonical
+        program the final τ-boundary coincides with the qτ-boundary and
+        arrives pre-fused as ``W_inter @ W_intra`` (the delta/upload
+        path keeps the first mix separate, where the fold is invalid).
+        Identical consecutive blocks compile to ONE ``lax.scan``;
+        buffers are donated so peak memory stays ~1× the bank."""
         n = self.sched.n
         comp, dp = self.compression, self.dp
-        plain = comp is None and dp is None
         xs, ys = self.data["xs"], self.data["ys"]
         make_local_step = self._flat_helpers()
         segments = self.bank.layout.segments
+        plans = prg.lowering_plan(program, fuse=True)
+        runs = prg.block_runs(plans)
+        nblocks = len(plans)
 
-        def train_tau(Y, M, key, act2d):
-            local_step = make_local_step(xs, ys, act2d)
-            keys = jax.random.split(key, fl.tau)
-            (Y, M), _ = jax.lax.scan(local_step, (Y, M), keys)
-            return Y, M
-
-        def upload(delta, R, key):
+        def upload(delta, R, key, bp):
             """Flat-domain device uploads: DP then compression, row-wise
             (same per-device/per-leaf key schedule as the pytree path)."""
-            if dp is not None and dp.enabled:
+            if bp.privatize and dp is not None and dp.enabled:
                 from repro.core.privacy import privatize_update_flat
                 keys = jax.random.split(key, n)
                 delta = jax.vmap(
                     lambda d, k: privatize_update_flat(d, dp, k))(
                         delta, keys)
-            if comp is not None and comp.kind != "none":
+            if bp.compress and comp is not None and comp.kind != "none":
                 from repro.core.compress import compress_flat
                 keys = jax.random.split(jax.random.fold_in(key, 1), n)
                 delta, R = jax.vmap(
@@ -400,123 +473,240 @@ class FLSimulator:
                 )(delta, R, keys)
             return delta, R
 
-        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-        def global_round(Y, M, R, key, W_intra, W_final, mask):
-            act2d = (mask > 0.5)[:, None]
-            keys = jax.random.split(key, fl.q)
-            if plain:
-                def body(carry, k1):
-                    Y, M, R = carry
-                    Y, M = train_tau(Y, M, k1, act2d)
-                    Y = gossip_mix_rows(W_intra, Y)
-                    return (Y, M, R), None
-                if fl.q > 1:
-                    (Y, M, R), _ = jax.lax.scan(body, (Y, M, R),
-                                                keys[:-1])
-                Y, M = train_tau(Y, M, keys[-1], act2d)
-                Y = gossip_mix_rows(W_final, Y)   # fused τ∘qτ boundary
+        def run_block(bp, gm, Y, M, R, k1, act2d, tau_dev):
+            op = bp.local
+            local_step = make_local_step(
+                xs, ys, act2d, tau_dev=tau_dev if op.adaptive else None,
+                lr_scale=op.lr_scale)
+            if not bp.upload:
+                Y, M = self._train_scan(local_step, Y, M, k1, op)
+                for W in gm:
+                    Y = gossip_mix_rows(W, Y)
                 return Y, M, R
+            Y0 = Y
+            Y, M = self._train_scan(local_step, Y, M, k1, op)
+            delta = Y - Y0
+            delta, R = upload(delta, R, jax.random.fold_in(k1, 7), bp)
+            Y = Y0 + gossip_mix_rows(gm[0], delta)
+            for W in gm[1:]:
+                Y = gossip_mix_rows(W, Y)
+            return Y, M, R
 
-            def body(carry, k1):
-                Y0, M, R = carry
-                Y, M = train_tau(Y0, M, k1, act2d)
-                delta = Y - Y0
-                delta, R = upload(delta, R, jax.random.fold_in(k1, 7))
-                Y = Y0 + gossip_mix_rows(W_intra, delta)
-                return (Y, M, R), None
-            (Y, M, R), _ = jax.lax.scan(body, (Y, M, R), keys)
-            Y = gossip_mix_rows(W_final, Y)       # W_inter on this path
+        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+        def global_round(Y, M, R, key, args, mask):
+            act2d = (mask > 0.5)[:, None]
+            tau_dev = args.tau_dev
+            keys = jax.random.split(key, nblocks)
+            mi = ki = 0
+            for bp, count in runs:
+                gm = args.mats[mi:mi + len(bp.groups)]
+                mi += len(bp.groups)
+                bkeys = keys[ki:ki + count]
+                ki += count
+                if count > 1:
+                    def body(carry, k1, bp=bp, gm=gm):
+                        Y, M, R = carry
+                        Y, M, R = run_block(bp, gm, Y, M, R, k1, act2d,
+                                            tau_dev)
+                        return (Y, M, R), None
+                    (Y, M, R), _ = jax.lax.scan(body, (Y, M, R), bkeys)
+                else:
+                    Y, M, R = run_block(bp, gm, Y, M, R, bkeys[0], act2d,
+                                        tau_dev)
             return Y, M, R
 
         return global_round
 
-    def _build_round_compact(self):
-        """The compacted scenario round: gradient/momentum work runs on a
-        dense (k_pad, T) gather of the participating rows (``idx`` holds
-        distinct rows — cohort first, inert padding after — so the
-        scatter back is deterministic); mixing boundaries still stream
-        the full bank, since masked operators move every device's row.
-        Traced once per cohort bucket (static shapes under jit)."""
-        fl = self.fl
+    def _lower_compact(self, program: prg.RoundProgram):
+        """Compile a RoundProgram to the compacted scenario round:
+        gradient/momentum work runs on a dense (k_pad, T) gather of the
+        participating rows (``idx`` holds distinct rows — cohort first,
+        inert padding after — so the scatter back is deterministic);
+        mixing boundaries still stream the full bank, since masked
+        operators move every device's row. Traced once per cohort bucket
+        (static shapes under jit). Upload programs never dispatch here."""
         xs, ys = self.data["xs"], self.data["ys"]
         make_local_step = self._flat_helpers()
+        plans = prg.lowering_plan(program, fuse=True)
+        runs = prg.block_runs(plans)
+        nblocks = len(plans)
+        assert not program.has_upload, \
+            "compacted rounds are for plain programs only"
 
         @functools.partial(jax.jit, donate_argnums=(0, 1))
-        def compact_round(Y, M, key, idx, lane, W_intra, W_comb):
+        def compact_round(Y, M, key, idx, lane, args):
             lane2d = lane[:, None]
             xs_c, ys_c = xs[idx], ys[idx]
-            local_step = make_local_step(xs_c, ys_c, lane2d, gather=idx)
+            tau_c = (None if args.tau_dev is None else args.tau_dev[idx])
 
-            def train_edge(carry, k1):
+            def train_edge(carry, k1, op):
                 Y, M = carry
                 P, Mc = Y[idx], M[idx]
-                keys = jax.random.split(k1, fl.tau)
-                (P, Mc), _ = jax.lax.scan(local_step, (P, Mc), keys)
+                local_step = make_local_step(
+                    xs_c, ys_c, lane2d, gather=idx,
+                    tau_dev=tau_c if op.adaptive else None,
+                    lr_scale=op.lr_scale)
+                P, Mc = self._train_scan(local_step, P, Mc, k1, op)
                 return Y.at[idx].set(P), M.at[idx].set(Mc)
 
-            keys = jax.random.split(key, fl.q)
-            if fl.q > 1:
-                def body(carry, k1):
-                    Y, M = train_edge(carry, k1)
-                    return (gossip_mix_rows(W_intra, Y), M), None
-                (Y, M), _ = jax.lax.scan(body, (Y, M), keys[:-1])
-            Y, M = train_edge((Y, M), keys[-1])
-            Y = gossip_mix_rows(W_comb, Y)        # fused τ∘qτ boundary
+            keys = jax.random.split(key, nblocks)
+            mi = ki = 0
+            for bp, count in runs:
+                gm = args.mats[mi:mi + len(bp.groups)]
+                mi += len(bp.groups)
+                bkeys = keys[ki:ki + count]
+                ki += count
+
+                def one(carry, k1, bp=bp, gm=gm):
+                    Y, M = train_edge(carry, k1, bp.local)
+                    for W in gm:
+                        Y = gossip_mix_rows(W, Y)
+                    return Y, M
+                if count > 1:
+                    def body(carry, k1, one=one):
+                        return one(carry, k1), None
+                    (Y, M), _ = jax.lax.scan(body, (Y, M), bkeys)
+                else:
+                    Y, M = one((Y, M), bkeys[0])
             return Y, M
 
         return compact_round
+
+    # -- per-round program machinery ----------------------------------------
+    def _get_round(self, kind: str, program: prg.RoundProgram):
+        """The jitted lowering of ``program`` for one engine, compiled
+        once per program *structure* (``program.signature``)."""
+        key = (kind, program.signature)
+        fn = self._lowered.get(key)
+        if fn is None:
+            lower = {"legacy": self._lower_legacy,
+                     "flat": self._lower_flat,
+                     "compact": self._lower_compact}[kind]
+            fn = lower(program)
+            self._lowered[key] = fn
+        return fn
+
+    @property
+    def _round(self):
+        """Canonical-program legacy round (kept for tests/debugging)."""
+        return self._get_round("legacy", self._canonical)
+
+    @property
+    def _round_flat(self):
+        """Canonical-program flat round (kept for tests/debugging)."""
+        return self._get_round("flat", self._canonical)
+
+    @property
+    def _round_compact(self):
+        """Canonical-program compacted round (kept for tests)."""
+        return self._get_round("compact", self._canonical)
+
+    def _scenario_h(self):
+        return self.engine.H if self.engine is not None else self.sched.H
+
+    def _inter_operator(self, pi: int, plan, renorm: bool) -> np.ndarray:
+        """The (n, n) inter-cluster operator at gossip depth ``pi`` for
+        this round — the static schedule's W_inter when possible, else
+        the (masked) time-varying eq. 11 form at the requested depth."""
+        from repro.core.scenario import make_masked_w
+        if plan is None:
+            W = self._inter_static.get(pi)
+            if W is None:
+                W = make_masked_w(self.fl, self._static_labels,
+                                  np.ones(self.sched.n), self.sched.H,
+                                  pi=pi)[1]
+                self._inter_static[pi] = W
+            return W
+        if renorm:
+            if pi == self.fl.pi:
+                return plan.W_inter
+            return make_masked_w(self.fl, plan.labels, plan.mask,
+                                 self._scenario_h(), pi=pi)[1]
+        return make_masked_w(self.fl, plan.labels,
+                             np.ones(self.sched.n), self._scenario_h(),
+                             pi=pi)[1]
+
+    def _resolve_args(self, program: prg.RoundProgram, plan,
+                      fuse: bool) -> prg.RoundArgs:
+        """Concrete runtime operands (mixing matrices + adaptive step
+        cutoffs) for one round of ``program`` under ``plan``. Static
+        rounds cache their matrices per program structure."""
+        plans = prg.lowering_plan(program, fuse=fuse)
+        renorm = program.mask_renorm
+        if plan is None:
+            ck = (fuse, program.signature)
+            mats = self._static_mats.get(ck)
+            if mats is None:
+                mats = tuple(jnp.asarray(m) for m in prg.resolve_matrices(
+                    plans, self.sched.W_intra,
+                    lambda pi: self._inter_operator(pi, None, renorm)))
+                self._static_mats[ck] = mats
+        else:
+            if renorm:
+                W_intra = plan.W_intra
+            else:
+                from repro.core.scenario import make_masked_w
+                W_intra = make_masked_w(self.fl, plan.labels,
+                                        np.ones(self.sched.n),
+                                        self._scenario_h())[0]
+            mats = tuple(jnp.asarray(m) for m in prg.resolve_matrices(
+                plans, W_intra,
+                lambda pi: self._inter_operator(pi, plan, renorm)))
+        tau_dev = (jnp.asarray(program.tau_dev, jnp.int32)
+                   if program.adaptive else None)
+        return prg.RoundArgs(mats, tau_dev)
 
     # -- driver -------------------------------------------------------------
     def step_round(self):
         """Advance ONE global round.
 
         With a scenario attached, first realizes this round's plan
-        (mobility re-draws B_t, sampling draws the cohort) and feeds the
-        induced masked operators to the jitted round; otherwise replays
-        the static schedule with full participation. In bank mode a
-        partial cohort dispatches to the compacted round (``last_bucket``
-        records the capacity used). Returns the ``RoundPlan`` (or None
-        without a scenario) so callers — e.g. the wall-clock harness in
-        core/clock.py — can charge the cohort."""
+        (mobility re-draws B_t, sampling draws the cohort); the schedule
+        hook (or the canonical program) then decides this round's
+        :class:`repro.core.program.RoundProgram`, whose resolved
+        operators feed the program's lowered round for the active
+        engine. In bank mode a partial cohort of a plain program
+        dispatches to the compacted lowering (``last_bucket`` records
+        the capacity used). Returns the ``RoundPlan`` (or None without a
+        scenario); ``last_program`` records the executed program so
+        callers — e.g. the wall-clock harness in core/clock.py — can
+        charge the cohort per op."""
         if self.engine is not None:
             plan = self.engine.step()
             self.labels = plan.labels
-            W_intra = jnp.asarray(plan.W_intra, jnp.float32)
-            W_inter = jnp.asarray(plan.W_inter, jnp.float32)
             mask_np = plan.mask
         else:
             plan = None
-            W_intra, W_inter = self._W_intra_j, self._W_inter_j
             mask_np = None
+        r = self.round_index
+        self.round_index += 1
+        program = (self._schedule_fn(r, plan)
+                   if self._schedule_fn is not None else self._canonical)
+        self.last_program = program
+        mask = (jnp.asarray(mask_np, jnp.float32)
+                if mask_np is not None else self._full_mask)
         self.key, k = jax.random.split(self.key)
         if self.bank is None:
-            mask = (jnp.asarray(mask_np, jnp.float32)
-                    if mask_np is not None else self._full_mask)
-            self._params, self._mom, self._residual = self._round(
-                self._params, self._mom, self._residual, k, W_intra,
-                W_inter, mask)
+            args = self._resolve_args(program, plan, fuse=False)
+            fn = self._get_round("legacy", program)
+            self._params, self._mom, self._residual = fn(
+                self._params, self._mom, self._residual, k, args, mask)
             return plan
         b = self.bank
-        plain = self.compression is None and self.dp is None
+        args = self._resolve_args(program, plan, fuse=True)
         k_active = b.n if mask_np is None else int(mask_np.sum())
-        if plain and k_active < b.n and self._compact_enabled:
+        if (not program.has_upload and k_active < b.n
+                and self._compact_enabled):
             cp = compact_plan(mask_np, self._buckets)
             self.last_bucket = cp.k_pad
-            W_comb = jnp.asarray(plan.W_inter @ plan.W_intra, jnp.float32)
-            b.params, b.mom = self._round_compact(
-                b.params, b.mom, k, jnp.asarray(cp.idx),
-                jnp.asarray(cp.lane), W_intra, W_comb)
+            fn = self._get_round("compact", program)
+            b.params, b.mom = fn(b.params, b.mom, k, jnp.asarray(cp.idx),
+                                 jnp.asarray(cp.lane), args)
             return plan
         self.last_bucket = b.n
-        if plan is None:
-            W_final = self._W_comb_j if plain else self._W_inter_j
-            mask = self._full_mask
-        else:
-            W_final = (jnp.asarray(plan.W_inter @ plan.W_intra, jnp.float32)
-                       if plain else W_inter)
-            mask = jnp.asarray(mask_np, jnp.float32)
-        b.params, b.mom, b.residual = self._round_flat(
-            b.params, b.mom, b.residual, k, W_intra, W_final, mask)
+        fn = self._get_round("flat", program)
+        b.params, b.mom, b.residual = fn(b.params, b.mom, b.residual, k,
+                                         args, mask)
         return plan
 
     def run(self, rounds: int, eval_every: int = 1,

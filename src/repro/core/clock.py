@@ -10,14 +10,110 @@ by charging each global round
 so a straggler paces the round only when it actually participates, and
 :func:`run_wall_clock` couples a (scenario-aware) simulator to that clock,
 emitting ``(wall_time, acc)`` curves and :func:`time_to_accuracy`.
+
+Rounds driven by a :class:`repro.core.program.RoundProgram` are charged
+*per op* instead of by the static τ/q/π formula:
+:func:`program_compute_time` prices each ``LocalSteps`` op by the
+max-over-participants rule — with per-device ``tau_dev`` cutoffs for
+adaptive programs, which is exactly why adaptive-τ_k shortens rounds —
+and :func:`program_comm_time` prices each mixing boundary
+(``IntraMix`` → device→edge upload, ``InterGossip(π)`` → π backhaul
+gossip exchanges, specialized per algorithm as in §6.1). The canonical
+program reproduces ``charge_round`` to the last term.
 """
 from __future__ import annotations
 
 import time
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.config import FLConfig
+from repro.core import program as prg
 from repro.core.runtime import RuntimeModel
+
+
+def program_compute_time(rt: RuntimeModel, program: "prg.RoundProgram",
+                         speeds: Optional[Sequence[float]] = None,
+                         mask: Optional[np.ndarray] = None) -> float:
+    """Compute seconds of one programmed round: per ``LocalSteps`` op,
+    max over participating devices of steps_d·C/c_d — where steps_d is
+    the op's τ, or the device's ``tau_dev`` cutoff when adaptive.
+
+    ``speeds`` are per-device FLOP/s aligned with ``mask`` (the full
+    fleet vector); None means the RuntimeModel's homogeneous default.
+    The canonical program reduces to ``rt.compute_time(q·τ, ·)``."""
+    C = rt.wl.flops_per_step
+    total = 0.0
+    tau_dev = program.tau_dev
+    for b in program.blocks():
+        op = b.local
+        if op.adaptive and tau_dev is not None:
+            # cutoffs are bounded by the max adaptive tau across blocks;
+            # THIS block executes at most its own op.tau steps
+            steps = np.minimum(np.asarray(tau_dev, float), float(op.tau))
+        else:
+            steps = np.full(1 if speeds is None else len(speeds),
+                            float(op.tau))
+        if speeds is None:
+            if rt.speeds:
+                c = np.asarray(rt.speeds, float)[:len(steps)] \
+                    if len(steps) > 1 else np.array([min(rt.speeds)])
+            else:
+                c = np.full(steps.shape, rt.hw.device_flops)
+        else:
+            c = np.asarray(speeds, float)
+        if mask is not None and len(steps) == len(mask):
+            active = np.asarray(mask) > 0
+            if active.any():
+                steps, c = steps[active], c[active]
+        total += float(np.max(steps * C / c))
+    return total
+
+
+def program_comm_time(rt: RuntimeModel, algorithm: str,
+                      program: "prg.RoundProgram",
+                      uplink_ratio: float = 1.0) -> float:
+    """Communication seconds of one programmed round, priced per mixing
+    op with the §6.1 per-algorithm adaptation:
+
+    - ``ce_fedavg``: every IntraMix is a device→edge upload
+      (W_u/b_d2e); every InterGossip(π) is π backhaul exchanges
+      (π·W/b_e2e).
+    - ``hier_favg``: an InterGossip is a device→cloud upload (W/b_d2c)
+      that *replaces* the coincident intra upload in its block.
+    - ``fedavg``: IntraMix is the identity (free); InterGossip is the
+      cloud upload (W_u/b_d2c).
+    - ``local_edge``: IntraMix uploads to the edge; InterGossip is V
+      again — covered by the same upload (free).
+    - ``dec_local_sgd``: no edges; InterGossip(π) costs π·W/b_e2e.
+
+    The canonical program reduces to ``rt.comm_time(algorithm, q, π)``.
+    """
+    hw = rt.hw
+    W = rt.wl.model_bits(hw)
+    Wu = W * uplink_ratio
+    t = 0.0
+    for b in program.blocks():
+        n_intra = sum(isinstance(m, prg.IntraMix) for m in b.mixes)
+        inters = [m for m in b.mixes if isinstance(m, prg.InterGossip)]
+        if algorithm == "ce_fedavg":
+            t += n_intra * Wu / hw.b_d2e
+            t += sum(m.pi for m in inters) * W / hw.b_e2e
+        elif algorithm == "hier_favg":
+            # cloud hop carries the full model (uncompressed), matching
+            # RuntimeModel.comm_time's (q-1)·Wu/b_d2e + W/b_d2c
+            charged = max(0, n_intra - len(inters)) if inters else n_intra
+            t += charged * Wu / hw.b_d2e + len(inters) * W / hw.b_d2c
+        elif algorithm == "fedavg":
+            t += len(inters) * Wu / hw.b_d2c
+        elif algorithm == "local_edge":
+            t += n_intra * Wu / hw.b_d2e
+        elif algorithm == "dec_local_sgd":
+            t += sum(m.pi for m in inters) * W / hw.b_e2e
+        else:
+            raise ValueError(algorithm)
+    return t
 
 
 class EventClock:
@@ -41,6 +137,21 @@ class EventClock:
         self.now += comp + comm
         return self.now
 
+    def charge_program(self, program: "prg.RoundProgram",
+                       speeds: Optional[Sequence[float]] = None,
+                       mask: Optional[np.ndarray] = None,
+                       uplink_ratio: float = 1.0) -> float:
+        """Advance the clock by one round of ``program`` — the per-op
+        cost hook: each op is priced individually, so non-canonical
+        schedules (adaptive τ_k, time-varying π_t) are charged what
+        they actually execute. ``speeds`` here is the FULL per-device
+        FLOP/s vector (``mask`` selects the participants), unlike
+        ``charge_round``'s participant subset."""
+        self.now += (program_compute_time(self.rt, program, speeds, mask)
+                     + program_comm_time(self.rt, self.fl.algorithm,
+                                         program, uplink_ratio))
+        return self.now
+
 
 def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
                    eval_every: int = 1, eval_batch: int = 512,
@@ -51,8 +162,9 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
 
     With a scenario attached to the simulator, each round's compute charge
     is paced by the slowest device in that round's realized cohort
-    (``ScenarioEngine.active_speeds`` × the profile's device_flops);
-    without one, by the RuntimeModel's own speeds.
+    (``ScenarioEngine.speed_multipliers`` × the profile's device_flops,
+    masked to the cohort by ``charge_program``); without one, by the
+    RuntimeModel's own speeds.
 
     Besides the *simulated* wall clock, the history records the
     *simulator's own* per-eval-window host seconds (``sim_s``) — the
@@ -67,14 +179,24 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
     window_t0 = time.perf_counter()
     for r in range(rounds):
         plan = sim.step_round()
+        program = getattr(sim, "last_program", None)
         if plan is not None:
-            mult = sim.engine.active_speeds(plan)
-            speeds = mult * rt.hw.device_flops
+            mult = np.asarray(sim.engine.speed_multipliers, float)
+            fleet = mult * rt.hw.device_flops
             participants = int(plan.mask.sum())
         else:
-            speeds = None
+            fleet = None
             participants = sim.fl.n
-        t = clock.charge_round(speeds, uplink_ratio)
+        if program is not None:
+            # per-op pricing: adaptive/non-canonical programs are
+            # charged exactly the ops they executed
+            t = clock.charge_program(
+                program, fleet, None if plan is None else plan.mask,
+                uplink_ratio)
+        else:
+            speeds = (None if fleet is None
+                      else fleet[np.asarray(plan.mask) > 0])
+            t = clock.charge_round(speeds, uplink_ratio)
         if (r + 1) % eval_every == 0:
             sim_s = time.perf_counter() - window_t0
             acc, loss = sim.evaluate(eval_batch)

@@ -1,0 +1,454 @@
+"""RoundProgram IR — one declarative round schedule, three engine lowerings.
+
+CE-FedAvg's accuracy–latency tradeoff is governed entirely by the round's
+*boundary schedule*: τ local steps, intra-cluster aggregation every τ,
+π-round inter-server gossip every qτ (eq. 10/11). The paper fixes
+τ/q/π statically; related work (Ganguly et al., optimized floating
+aggregation; Wang et al., cooperative hetero edge/fog) argues the
+aggregation structure itself should adapt to device and network state.
+
+This module makes the schedule a first-class value. A
+:class:`RoundProgram` is a validated sequence of ops —
+
+=================  =========================================================
+op                 meaning
+=================  =========================================================
+``LocalSteps``     τ SGD+momentum steps on every participating device
+                   (optionally per-device step cutoffs ≤ τ, and an
+                   lr multiplier for this op)
+``Privatize``      device-side DP transform of the delta accumulated since
+                   the previous mixing boundary (before upload)
+``Compress``       device-side compression (+ error feedback) of that delta
+``IntraMix``       apply the intra-cluster operator V (eq. 11 τ-boundary)
+``InterGossip``    apply the inter-cluster operator B^T diag(c) H^π B with
+                   this op's own π (eq. 11 qτ-boundary)
+``MaskRenorm``     plan-level directive: renormalize this round's mixing
+                   operators over the participation mask (the
+                   ``topology.masked_*`` / ``renormalize_rows`` forms);
+                   without it a partial cohort still freezes its local
+                   steps but mixes with the *unmasked* operators
+=================  =========================================================
+
+— plus a :data:`ScheduleFn` hook ``(round_idx, RoundPlan) -> RoundProgram``
+so the schedule can react to realized device/network state between global
+rounds. :func:`canonical_program` compiles an :class:`repro.config.FLConfig`'s
+current τ/q/π knobs into the canonical program, so existing configs are
+untouched; each engine (legacy pytree, flat ModelBank, compacted cohort,
+sharded bank) is a *lowering* from the program to its jitted round —
+see ``FLSimulator._lower_*`` and ``ShardedBankCEFedAvg._lower_flat``.
+
+Lowerings consume the program through :func:`lowering_plan` (blocks of
+local work + mixing groups, with engine-dependent fusion of adjacent
+mixes) and :func:`block_runs` (maximal runs of identical blocks, which
+compile to one ``lax.scan`` instead of an unrolled trace). The runtime
+matrices for one concrete round come from :func:`resolve_matrices`, in
+exactly the order the lowered round consumes them — the single source of
+truth that keeps compiler and caller in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Callable, List, NamedTuple, Optional, Sequence, Tuple,
+                    Union)
+
+import numpy as np
+
+from repro.config import FLConfig
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSteps:
+    """``tau`` local SGD+momentum steps; ``lr_scale`` multiplies the
+    engine's learning rate for this op only. ``adaptive=True`` makes the
+    op read a per-device step cutoff (``RoundProgram.tau_dev``, values in
+    [1, tau]) at run time: device k applies only its first ``tau_dev[k]``
+    steps and is frozen for the rest — the trip count (and therefore the
+    compiled trace) stays ``tau``, so a schedule can re-draw the cutoffs
+    every round without recompiling."""
+    tau: int
+    lr_scale: float = 1.0
+    adaptive: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class IntraMix:
+    """Apply the intra-cluster averaging operator V (eq. 11)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class InterGossip:
+    """Apply the inter-cluster operator built with THIS op's ``pi``
+    gossip steps (eq. 11's B^T diag(c) H^π B)."""
+    pi: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Compress:
+    """Compress (+ error-feedback) the device delta before upload."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Privatize:
+    """DP-transform (clip + noise) the device delta before upload."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskRenorm:
+    """Plan-level directive: build this round's operators renormalized
+    over the participation mask (``scenario.make_masked_w``)."""
+
+
+MixOp = Union[IntraMix, InterGossip]
+Op = Union[LocalSteps, IntraMix, InterGossip, Compress, Privatize,
+           MaskRenorm]
+
+
+# ---------------------------------------------------------------------------
+# blocks — the normal form every lowering consumes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One unit of local work plus the mixing boundary that closes it."""
+    local: LocalSteps
+    privatize: bool
+    compress: bool
+    mixes: Tuple[MixOp, ...]
+
+    @property
+    def upload(self) -> bool:
+        """True when the block takes the delta/upload path (the mixing
+        operator applies to the transformed delta, not the params)."""
+        return self.privatize or self.compress
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundProgram:
+    """A validated sequence of round ops (the IR).
+
+    ``ops`` is the structural identity: it is what lowerings compile and
+    what the per-engine jit caches key on (``signature``). ``tau_dev`` is
+    a *runtime binding* — the per-device step cutoffs an ``adaptive``
+    ``LocalSteps`` op reads — deliberately excluded from equality/hash so
+    re-drawing it each round never recompiles."""
+    ops: Tuple[Op, ...]
+    tau_dev: Optional[np.ndarray] = dataclasses.field(
+        default=None, compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "ops", tuple(self.ops))
+        self.validate()
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def signature(self) -> Tuple[Op, ...]:
+        """Hashable structural identity (compile-cache key)."""
+        return self.ops
+
+    @property
+    def mask_renorm(self) -> bool:
+        return any(isinstance(o, MaskRenorm) for o in self.ops)
+
+    @property
+    def has_upload(self) -> bool:
+        return any(isinstance(o, (Compress, Privatize)) for o in self.ops)
+
+    @property
+    def adaptive(self) -> bool:
+        return any(isinstance(o, LocalSteps) and o.adaptive
+                   for o in self.ops)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks())
+
+    def blocks(self) -> Tuple[Block, ...]:
+        """Parse ``ops`` into the block normal form (cached)."""
+        cached = getattr(self, "_blocks", None)
+        if cached is None:
+            cached = _parse_blocks(self.ops)
+            object.__setattr__(self, "_blocks", cached)
+        return cached
+
+    def validate(self) -> None:
+        """Raise ValueError unless the op sequence parses into blocks."""
+        blocks = self.blocks()
+        if not blocks:
+            raise ValueError("a RoundProgram needs at least one "
+                             "LocalSteps block")
+        for b in blocks:
+            if b.local.tau < 1:
+                raise ValueError(f"LocalSteps.tau must be >= 1: {b.local}")
+            if b.local.lr_scale <= 0.0:
+                raise ValueError(f"lr_scale must be > 0: {b.local}")
+            for m in b.mixes:
+                if isinstance(m, InterGossip) and m.pi < 1:
+                    raise ValueError(f"InterGossip.pi must be >= 1: {m}")
+        if self.tau_dev is not None:
+            td = np.asarray(self.tau_dev)
+            if td.ndim != 1 or not np.issubdtype(td.dtype, np.integer):
+                raise ValueError("tau_dev must be a 1-D integer array")
+            taus = [b.local.tau for b in blocks if b.local.adaptive]
+            if taus and (td.min() < 1 or td.max() > max(taus)):
+                raise ValueError(
+                    f"tau_dev values must lie in [1, {max(taus)}], got "
+                    f"[{td.min()}, {td.max()}]")
+        if self.adaptive and self.tau_dev is None:
+            raise ValueError("adaptive LocalSteps need a tau_dev binding "
+                             "(RoundProgram(..., tau_dev=...))")
+
+    def bind(self, tau_dev: Optional[np.ndarray]) -> "RoundProgram":
+        """Same structure, new per-device cutoffs (no recompile)."""
+        return dataclasses.replace(self, tau_dev=tau_dev)
+
+
+def _parse_blocks(ops: Sequence[Op]) -> Tuple[Block, ...]:
+    blocks: List[Block] = []
+    i, N = 0, len(ops)
+    while i < N:
+        op = ops[i]
+        if isinstance(op, MaskRenorm):
+            i += 1
+            continue
+        if not isinstance(op, LocalSteps):
+            raise ValueError(
+                f"op {i} ({op}) must start a block with LocalSteps")
+        local = op
+        i += 1
+        privatize = compress = False
+        if i < N and isinstance(ops[i], Privatize):
+            privatize, i = True, i + 1
+        if i < N and isinstance(ops[i], Compress):
+            compress, i = True, i + 1
+        if i < N and isinstance(ops[i], Privatize):
+            raise ValueError("Privatize must precede Compress (the upload "
+                             "applies DP before compression)")
+        mixes: List[MixOp] = []
+        while i < N and isinstance(ops[i], (IntraMix, InterGossip)):
+            mixes.append(ops[i])
+            i += 1
+        if not mixes:
+            raise ValueError(
+                f"LocalSteps at op {i - 1} has no closing mixing boundary "
+                f"(IntraMix/InterGossip)")
+        blocks.append(Block(local, privatize, compress, tuple(mixes)))
+    return tuple(blocks)
+
+
+# ---------------------------------------------------------------------------
+# canonical program — FLConfig's τ/q/π knobs, compiled
+# ---------------------------------------------------------------------------
+
+def canonical_program(fl: FLConfig, *, privatize: bool = False,
+                      compress: bool = False) -> RoundProgram:
+    """The static schedule of Algorithm 1 as a program: q blocks of
+    (τ local steps → [Privatize → Compress →] IntraMix), the last block
+    also closed by ``InterGossip(fl.pi)`` — exactly the boundary
+    placement of eq. 11, so lowering this program reproduces the
+    pre-IR engines' trajectories."""
+    block: List[Op] = [LocalSteps(fl.tau)]
+    if privatize:
+        block.append(Privatize())
+    if compress:
+        block.append(Compress())
+    block.append(IntraMix())
+    ops: List[Op] = [MaskRenorm()]
+    for _ in range(fl.q):
+        ops.extend(block)
+    ops.append(InterGossip(fl.pi))
+    return RoundProgram(tuple(ops))
+
+
+# ---------------------------------------------------------------------------
+# lowering plan: mixing groups (+ engine fusion policy) and scan runs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MixGroup:
+    """Mix ops an engine applies as ONE pass: a fused group's matrices
+    multiply into a single operator at resolve time (the ModelBank
+    engines' single-pass ``W_inter @ W_intra`` boundary); an unfused
+    group holds exactly one op (the legacy engine's sequential form)."""
+    ops: Tuple[MixOp, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A block with its mixes grouped under an engine's fusion policy.
+    On the upload path the first mix stays its own group — it applies to
+    the transformed *delta*, which cannot fold into the later mixes."""
+    local: LocalSteps
+    privatize: bool
+    compress: bool
+    upload: bool
+    groups: Tuple[MixGroup, ...]
+
+
+def lowering_plan(program: RoundProgram, *,
+                  fuse: bool) -> Tuple[BlockPlan, ...]:
+    """Group each block's mixes for an engine: ``fuse=True`` folds
+    adjacent plain mixes into one streaming pass (flat/compact/sharded
+    banks); ``fuse=False`` keeps one group per op (legacy pytree)."""
+    plans: List[BlockPlan] = []
+    for b in program.blocks():
+        if b.upload:
+            head = [MixGroup((b.mixes[0],))]
+            rest = b.mixes[1:]
+            if rest:
+                if fuse:
+                    head.append(MixGroup(tuple(rest)))
+                else:
+                    head.extend(MixGroup((m,)) for m in rest)
+            groups = tuple(head)
+        elif fuse:
+            groups = (MixGroup(tuple(b.mixes)),)
+        else:
+            groups = tuple(MixGroup((m,)) for m in b.mixes)
+        plans.append(BlockPlan(b.local, b.privatize, b.compress, b.upload,
+                               groups))
+    return tuple(plans)
+
+
+def block_runs(plans: Sequence[BlockPlan]
+               ) -> Tuple[Tuple[BlockPlan, int], ...]:
+    """Maximal runs of identical consecutive block plans. A run of
+    length L lowers to ONE ``lax.scan`` over its L block keys (the
+    canonical program's q-1 identical edge rounds), so arbitrary
+    programs stay cheap to compile."""
+    runs: List[List] = []
+    for bp in plans:
+        if runs and runs[-1][0] == bp:
+            runs[-1][1] += 1
+        else:
+            runs.append([bp, 1])
+    return tuple((bp, c) for bp, c in runs)
+
+
+def resolve_matrices(plans: Sequence[BlockPlan], W_intra: np.ndarray,
+                     inter_of_pi: Callable[[int], np.ndarray]
+                     ) -> Tuple[np.ndarray, ...]:
+    """The concrete mixing matrices one round's lowered function
+    consumes, in consumption order: one matrix per MixGroup per *run*
+    (identical consecutive blocks share their groups' matrices). A fused
+    group's ops compose right-to-left — ops applied o1 then o2 become
+    the single operator M2 @ M1."""
+    mats: List[np.ndarray] = []
+    for bp, _count in block_runs(plans):
+        for g in bp.groups:
+            M = None
+            for op in g.ops:
+                Mi = (W_intra if isinstance(op, IntraMix)
+                      else inter_of_pi(op.pi))
+                M = Mi if M is None else Mi @ M
+            mats.append(np.asarray(M, np.float32))
+    return tuple(mats)
+
+
+class RoundArgs(NamedTuple):
+    """Runtime operands of a lowered round: the resolved mixing matrices
+    (``resolve_matrices`` order) and, for adaptive programs, the (n,)
+    int32 per-device step cutoffs. A pytree, so it jits transparently;
+    ``tau_dev=None`` is structural (no dummy operand for non-adaptive
+    programs)."""
+    mats: Tuple
+    tau_dev: Optional[object] = None
+
+
+# ---------------------------------------------------------------------------
+# schedules — ScheduleFn hook + the named non-canonical schedules
+# ---------------------------------------------------------------------------
+
+#: ``(round_idx, RoundPlan | None) -> RoundProgram`` — called once per
+#: global round, BEFORE the round runs, with the realized scenario plan
+#: (mobility/sampling) for that round; returns the program to execute.
+ScheduleFn = Callable[[int, Optional[object]], RoundProgram]
+
+SCHEDULES = ("static", "adaptive_tau", "pi_decay")
+
+
+def adaptive_tau_map(tau: int, labels: np.ndarray, mask: np.ndarray,
+                     multipliers: np.ndarray, num_clusters: int,
+                     tau_floor: int = 1) -> np.ndarray:
+    """Per-device step cutoffs for the adaptive-τ_k schedule.
+
+    Cluster k's cutoff scales the base τ by the speed of its slowest
+    *participating* device relative to the fastest cluster's slowest
+    device: τ_k = clip(round(τ · c_k / max_j c_j), tau_floor, τ). The
+    round's compute time — the EventClock's max-over-participants
+    τ_k·C/c_d rule — then collapses from τ/min_d c_d to ≈ τ/max_k c_k:
+    a slow cluster no longer paces everyone, it just trains less.
+    """
+    mult = np.asarray(multipliers, float)
+    c = np.full(num_clusters, np.nan)
+    for k in range(num_clusters):
+        sel = (labels == k) & (mask > 0)
+        if sel.any():
+            c[k] = mult[sel].min()
+    ref = np.nanmax(c) if np.isfinite(c).any() else 1.0
+    tau_k = np.where(np.isfinite(c),
+                     np.clip(np.round(tau * c / ref), tau_floor, tau),
+                     tau)
+    return tau_k[labels].astype(np.int32)
+
+
+def make_schedule(name: str, fl: FLConfig, *, engine=None,
+                  speeds: Optional[np.ndarray] = None,
+                  privatize: bool = False, compress: bool = False,
+                  tau_floor: int = 1, decay_round: int = 5,
+                  pi_late: Optional[int] = None) -> ScheduleFn:
+    """Build a named :data:`ScheduleFn`.
+
+    - ``static``: the canonical program every round (the paper).
+    - ``adaptive_tau``: per-cluster τ_k cutoffs from device speeds
+      (``speeds`` multipliers, or ``engine.speed_multipliers`` of an
+      attached :class:`repro.core.scenario.ScenarioEngine`); re-drawn
+      every round from that round's realized cohort and assignment, so
+      it tracks mobility. Homogeneous speeds reduce to static.
+    - ``pi_decay``: time-varying π_t — the full ``fl.pi`` gossip depth
+      while ``round_idx < decay_round`` (consensus matters early), then
+      ``pi_late`` (default max(1, fl.pi // 5)) to shed backhaul time
+      once the edge models agree.
+    """
+    if name not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {name!r}; choose from {SCHEDULES}")
+    canonical = canonical_program(fl, privatize=privatize,
+                                  compress=compress)
+    if name == "static":
+        return lambda r, plan: canonical
+
+    if name == "adaptive_tau":
+        mult = None
+        if speeds is not None:
+            mult = np.asarray(speeds, float)
+        elif engine is not None:
+            mult = np.asarray(engine.speed_multipliers, float)
+        if mult is None:
+            mult = np.ones(fl.n)
+        template = RoundProgram(
+            tuple(dataclasses.replace(o, adaptive=True)
+                  if isinstance(o, LocalSteps) else o
+                  for o in canonical.ops),
+            tau_dev=np.full(fl.n, fl.tau, np.int32))
+        base_labels = np.repeat(np.arange(fl.num_clusters),
+                                fl.devices_per_cluster)
+
+        def adaptive(r, plan):
+            labels = plan.labels if plan is not None else base_labels
+            mask = plan.mask if plan is not None else np.ones(fl.n)
+            return template.bind(adaptive_tau_map(
+                fl.tau, labels, mask, mult, fl.num_clusters, tau_floor))
+        return adaptive
+
+    lo_pi = max(1, fl.pi // 5) if pi_late is None else pi_late
+    late = RoundProgram(tuple(
+        InterGossip(lo_pi) if isinstance(o, InterGossip) else o
+        for o in canonical.ops))
+
+    def decay(r, plan):
+        return canonical if r < decay_round else late
+    return decay

@@ -123,6 +123,24 @@ def paper_runtime_model(
                         device_speeds)
 
 
+def compute_bound_runtime_model(
+        device_speeds: Optional[Sequence[float]] = None) -> RuntimeModel:
+    """A compute-dominated counterpart to :func:`paper_runtime_model`:
+    microcontroller-class devices (100 MFLOP/s — two to three orders
+    below the §6.1 iPhone) behind LAN-class links (50/200/10 Mb/s), the
+    on-premise federated-edge regime where local training, not the
+    uplink, paces the round. This is the profile under which schedule
+    adaptations of the *compute* term (adaptive per-cluster τ_k,
+    ``core.program.make_schedule("adaptive_tau", ...)``) move wall-clock
+    time-to-accuracy; under the paper's uplink-bound §6.1 constants the
+    compute term is milliseconds against minutes of communication."""
+    return RuntimeModel(
+        HardwareProfile(device_flops=0.1e9, b_d2e=50 * MBPS,
+                        b_e2e=200 * MBPS, b_d2c=10 * MBPS),
+        WorkloadProfile(6_603_710, 13.30e6 * 50 * 3),
+        device_speeds)
+
+
 def gossip_traffic_per_round(impl: str, *, num_clusters: int,
                              devices_per_cluster: int, pi: int,
                              degrees: Sequence[int],

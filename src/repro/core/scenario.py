@@ -28,7 +28,7 @@ charges the plan's cohort for wall time. When the scenario is trivial
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -85,19 +85,24 @@ class RoundPlan:
 
 
 def make_masked_w(fl: FLConfig, labels: np.ndarray, mask: np.ndarray,
-                  H: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+                  H: np.ndarray,
+                  pi: Optional[int] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-round (W_intra, W_inter) for the algorithm under assignment
     ``labels`` and participation ``mask`` — the time-varying eq. 11.
+    ``pi`` overrides the gossip depth of the inter operator (time-varying
+    π_t schedules, ``core.program.InterGossip``); default ``fl.pi``.
 
     Reduces to :func:`repro.core.cefedavg.make_w_schedule`'s operators
     when ``labels`` is the contiguous equal-cluster assignment and
     ``mask`` is all-ones."""
     n = labels.shape[0]
+    pi = fl.pi if pi is None else pi
     eye = np.eye(n)
     B = topo.assignment_matrix(labels, fl.num_clusters)
     if fl.algorithm == "ce_fedavg":
         return (topo.masked_intra_operator(B, mask),
-                topo.masked_inter_operator(B, H, fl.pi, mask))
+                topo.masked_inter_operator(B, H, pi, mask))
     if fl.algorithm == "hier_favg":
         return (topo.masked_intra_operator(B, mask),
                 topo.masked_global_average(n, mask))
@@ -107,7 +112,7 @@ def make_masked_w(fl: FLConfig, labels: np.ndarray, mask: np.ndarray,
         V = topo.masked_intra_operator(B, mask)
         return V, V
     if fl.algorithm == "dec_local_sgd":
-        Hp = np.linalg.matrix_power(H, fl.pi)
+        Hp = np.linalg.matrix_power(H, pi)
         return eye, topo.renormalize_rows(Hp, mask)
     raise ValueError(fl.algorithm)
 
@@ -183,7 +188,12 @@ class ScenarioEngine:
         return plan
 
     def active_speeds(self, plan: RoundPlan) -> np.ndarray:
-        """Speed multipliers of the plan's participating devices."""
+        """Speed multipliers of the plan's participating devices.
+
+        Convenience accessor for external analyses; the wall-clock
+        harness itself passes the full ``speed_multipliers`` vector plus
+        the plan's mask to ``EventClock.charge_program``, which needs
+        per-device alignment with adaptive ``tau_dev`` cutoffs."""
         return self.speed_multipliers[plan.active]
 
 

@@ -33,6 +33,7 @@ from repro import sharding as sh
 from repro.config import ExperimentConfig, FLConfig
 from repro.core import collectives as col
 from repro.core import gossip as gsp
+from repro.core import program as prg
 from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
 from repro.models import model as mdl
 from repro.optim import make_optimizer, make_lr_schedule
@@ -363,135 +364,205 @@ class ShardedBankCEFedAvg(FLSimulator):
         self.bank.place(self._row_sharding)
 
     # -- the sharded round ---------------------------------------------------
-    def _build_round_compact(self):
-        """Unused: compaction would gather cohort rows across devices."""
-        return None
+    def _lower_compact(self, program):
+        """Never dispatched: rows are pinned to devices, so compaction
+        (a cross-device cohort gather) is disabled in ``__init__``."""
+        raise AssertionError(
+            "ShardedBankCEFedAvg disables cohort compaction")
 
-    def _build_round_flat(self):
-        """One jitted ``shard_map`` global round over the bank shards,
-        same signature/key-schedule as the single-device flat round
-        (``FLSimulator._build_round_flat``) so ``step_round`` dispatches
-        identically. Buffers are donated: peak per-device memory stays
-        ~1× the (1, T) bank shard per resident buffer."""
+    def _lower_flat(self, program):
+        """Compile a :class:`repro.core.program.RoundProgram` to ONE
+        jitted ``shard_map`` global round over the bank shards — the
+        sharded lowering of the IR, same operand schedule as the
+        single-device flat lowering so ``step_round`` dispatches
+        identically:
+
+        - ``LocalSteps`` → q·τ local SGD steps on the local row (the
+          single-device key/batch schedule, with per-device ``tau_dev``
+          cutoffs for adaptive programs);
+        - ``IntraMix`` → grouped ``psum`` over the cluster's rows
+          (structured path) or the dense masked operator via weighted
+          rotations (scenario/non-gossip rounds);
+        - ``InterGossip(π)`` → cluster mean + π gossip rounds of that
+          depth's edge-colored ``ppermute`` matchings (one
+          ``GossipSchedule`` per distinct π in the program), or dense
+          rotations on the scenario path. Consecutive cluster means
+          dedupe (V is idempotent), which is exactly how the fused
+          τ∘qτ boundary stays a single psum + gossip pass.
+
+        Buffers are donated: peak per-device memory stays ~1× the
+        (1, T) bank shard per resident buffer."""
         fl = self.fl
         n = self.sched.n
         mesh = self.mesh
         comp, dp = self.compression, self.dp
-        plain = comp is None and dp is None
         with_res = self.bank.residual is not None
         xs, ys = self.data["xs"], self.data["ys"]
         N = xs.shape[1]
         layout = self.bank.layout
-        batch, momentum, lr = self.batch, self.momentum, self.lr
+        batch, momentum, lr0 = self.batch, self.momentum, self.lr
         dpc = fl.devices_per_cluster
         m = fl.num_clusters
         segments = layout.segments
+        plans = prg.lowering_plan(program, fuse=True)
+        runs = prg.block_runs(plans)
+        nblocks = len(plans)
+        adaptive = program.adaptive
+        goffs, nmats = [], 0
+        for bp, _cnt in runs:
+            goffs.append(nmats)
+            nmats += len(bp.groups)
         # static ce_fedavg schedule -> structured collectives (psum +
         # gossip matchings); anything time-varying or non-gossip -> exact
         # dense operators via weighted rotations
         structured = self.engine is None and fl.algorithm == "ce_fedavg"
-        gsched = (gsp.GossipSchedule.build(self.sched.H, fl.pi, dpc)
-                  if structured and m > 1 else None)
+        gscheds = {}
+        if structured and m > 1:
+            for bp in plans:
+                for g in bp.groups:
+                    for op in g.ops:
+                        if (isinstance(op, prg.InterGossip)
+                                and op.pi not in gscheds):
+                            gscheds[op.pi] = gsp.GossipSchedule.build(
+                                self.sched.H, op.pi, dpc)
 
         def loss_row(row, x, y):
             return self._loss(layout.unflatten_one(row), x, y)
         grad_row = jax.grad(loss_row)
 
-        def intra(Y, W_intra):
-            if structured:
-                return gsp.cluster_mean_in_body(mesh, Y, m, dpc)
-            return gsp.dense_mix_rows(W_intra, Y, mesh)
-
-        def final(Y, W_final):
-            # W_final is W_inter@W_intra (plain, fused) or W_inter
-            # (upload path); structurally both reduce to cluster-mean
-            # then π gossip rounds, since V is idempotent and W_inter
-            # itself starts with the cluster average (eq. 11's B^T…B)
-            if structured:
-                Y = gsp.cluster_mean_in_body(mesh, Y, m, dpc)
-                if gsched is not None:
-                    Y = gsp.gossip_in_body(gsched, mesh, Y)
-                return Y
-            return gsp.dense_mix_rows(W_final, Y, mesh)
-
-        def upload_row(d_row, r_row, key, my):
-            """Device-side upload transform of the LOCAL delta row —
-            same per-row key schedule as the single-device engine
-            (row i of split(key, n)), so uploads are bit-matched."""
-            if dp is not None and dp.enabled:
-                from repro.core.privacy import privatize_update_flat
-                keys = jax.random.split(key, n)
-                d_row = privatize_update_flat(d_row, dp, keys[my])
-            if comp is not None and comp.kind != "none":
-                from repro.core.compress import compress_flat
-                keys = jax.random.split(jax.random.fold_in(key, 1), n)
-                d_row, r_row = compress_flat(comp, d_row, r_row, keys[my],
-                                             segments)
-            return d_row, r_row
-
-        def body(*args):
+        def body(*flat):
+            Y, M = flat[0], flat[1]
+            i = 2
+            Rres = None
             if with_res:
-                Y, M, Rres, key, W_intra, W_final, mask, xs_l, ys_l = args
-            else:
-                Y, M, key, W_intra, W_final, mask, xs_l, ys_l = args
-                Rres = None
+                Rres, i = flat[2], 3
+            key = flat[i]
+            mats = flat[i + 1:i + 1 + nmats]
+            i += 1 + nmats
+            td = None
+            if adaptive:
+                td, i = flat[i], i + 1
+            mask, xs_l, ys_l = flat[i], flat[i + 1], flat[i + 2]
             my = col.flat_axis_index(mesh)
             act = jax.lax.dynamic_slice_in_dim(
                 (mask > 0.5)[:, None], my, 1, 0)          # (1, 1)
+            td_my = (jax.lax.dynamic_slice_in_dim(td, my, 1, 0)
+                     if adaptive else None)               # (1,)
             x0, y0 = xs_l[0], ys_l[0]
 
-            def local_step(carry, k):
-                Y, M = carry
-                idx = jax.random.randint(k, (n, batch), 0, N)
-                ib = jax.lax.dynamic_slice_in_dim(idx, my, 1, 0)[0]
-                G = grad_row(Y[0], x0[ib], y0[ib])[None]
-                M = jnp.where(act, momentum * M + G, M)
-                Y = jnp.where(act, Y - lr * M, Y)
-                return (Y, M), None
+            def make_local_step(op):
+                lr = lr0 * op.lr_scale
 
-            def train_tau(Y, M, k1):
-                keys = jax.random.split(k1, fl.tau)
-                (Y, M), _ = jax.lax.scan(local_step, (Y, M), keys)
+                def local_step(carry, xs_):
+                    if op.adaptive:
+                        k, s = xs_
+                        a = act & (s < td_my[:, None])
+                    else:
+                        k, a = xs_, act
+                    Y, M = carry
+                    idx = jax.random.randint(k, (n, batch), 0, N)
+                    ib = jax.lax.dynamic_slice_in_dim(idx, my, 1, 0)[0]
+                    G = grad_row(Y[0], x0[ib], y0[ib])[None]
+                    M = jnp.where(a, momentum * M + G, M)
+                    Y = jnp.where(a, Y - lr * M, Y)
+                    return (Y, M), None
+                return local_step
+
+            def train_block(Y, M, k1, op):
+                keys = jax.random.split(k1, op.tau)
+                xs_ = (keys, jnp.arange(op.tau)) if op.adaptive else keys
+                (Y, M), _ = jax.lax.scan(make_local_step(op), (Y, M), xs_)
                 return Y, M
 
-            keys = jax.random.split(key, fl.q)
-            if plain:
-                def qbody(carry, k1):
-                    Y, M = carry
-                    Y, M = train_tau(Y, M, k1)
-                    return (intra(Y, W_intra), M), None
-                if fl.q > 1:
-                    (Y, M), _ = jax.lax.scan(qbody, (Y, M), keys[:-1])
-                Y, M = train_tau(Y, M, keys[-1])
-                Y = final(Y, W_final)                 # fused τ∘qτ boundary
-                return (Y, M, Rres) if with_res else (Y, M)
+            def upload_row(d_row, r_row, key, bp):
+                """Device-side upload transform of the LOCAL delta row —
+                same per-row key schedule as the single-device engine
+                (row i of split(key, n)), so uploads are bit-matched."""
+                if bp.privatize and dp is not None and dp.enabled:
+                    from repro.core.privacy import privatize_update_flat
+                    keys = jax.random.split(key, n)
+                    d_row = privatize_update_flat(d_row, dp, keys[my])
+                if bp.compress and comp is not None and comp.kind != "none":
+                    from repro.core.compress import compress_flat
+                    keys = jax.random.split(jax.random.fold_in(key, 1), n)
+                    d_row, r_row = compress_flat(comp, d_row, r_row,
+                                                 keys[my], segments)
+                return d_row, r_row
 
-            def qbody(carry, k1):
-                Y0, M, Rr = carry
-                Y, M = train_tau(Y0, M, k1)
+            def apply_group(Y, g, Wg, uniform):
+                """Lower one MixGroup. ``uniform`` tracks whether rows
+                are already cluster-uniform, so consecutive cluster
+                means (V idempotent, and W_inter's leading B^T…B)
+                dedupe into one psum — the fused τ∘qτ boundary."""
+                if not structured:
+                    return gsp.dense_mix_rows(Wg, Y, mesh), False
+                for op in g.ops:
+                    if not uniform:
+                        Y = gsp.cluster_mean_in_body(mesh, Y, m, dpc)
+                        uniform = True
+                    if isinstance(op, prg.InterGossip):
+                        gs = gscheds.get(op.pi)
+                        if gs is not None:
+                            Y = gsp.gossip_in_body(gs, mesh, Y)
+                return Y, uniform
+
+            def run_block(bp, goff, Y, M, Rres, k1):
+                op = bp.local
+                if not bp.upload:
+                    Y, M = train_block(Y, M, k1, op)
+                    uniform = False
+                    for j, g in enumerate(bp.groups):
+                        Y, uniform = apply_group(Y, g, mats[goff + j],
+                                                 uniform)
+                    return Y, M, Rres
+                Y0 = Y
+                Y, M = train_block(Y, M, k1, op)
                 d_row, r_row = upload_row(
-                    (Y - Y0)[0], None if Rr is None else Rr[0],
-                    jax.random.fold_in(k1, 7), my)
-                Rr = Rr if r_row is None else r_row[None]
-                Y = Y0 + intra(d_row[None], W_intra)
-                return (Y, M, Rr), None
-            (Y, M, Rres), _ = jax.lax.scan(qbody, (Y, M, Rres), keys)
-            Y = final(Y, W_final)                     # W_inter on this path
+                    (Y - Y0)[0], None if Rres is None else Rres[0],
+                    jax.random.fold_in(k1, 7), bp)
+                Rres = Rres if r_row is None else r_row[None]
+                d, _ = apply_group(d_row[None], bp.groups[0], mats[goff],
+                                   False)
+                Y = Y0 + d
+                uniform = False
+                for j in range(1, len(bp.groups)):
+                    Y, uniform = apply_group(Y, bp.groups[j],
+                                             mats[goff + j], uniform)
+                return Y, M, Rres
+
+            keys = jax.random.split(key, nblocks)
+            ki = 0
+            for (bp, count), goff in zip(runs, goffs):
+                bkeys = keys[ki:ki + count]
+                ki += count
+                if count > 1:
+                    def qbody(carry, k1, bp=bp, goff=goff):
+                        Y, M, Rr = carry
+                        Y, M, Rr = run_block(bp, goff, Y, M, Rr, k1)
+                        return (Y, M, Rr), None
+                    (Y, M, Rres), _ = jax.lax.scan(qbody, (Y, M, Rres),
+                                                   bkeys)
+                else:
+                    Y, M, Rres = run_block(bp, goff, Y, M, Rres, bkeys[0])
             return (Y, M, Rres) if with_res else (Y, M)
 
         row = P(self._rspec, None)
         rep = P()
         nbank = 3 if with_res else 2
-        in_specs = (row,) * nbank + (rep,) * 4 + (P(self._rspec),) * 2
+        nextra = 1 + nmats + (1 if adaptive else 0) + 1  # key+mats+td+mask
+        in_specs = (row,) * nbank + (rep,) * nextra + (P(self._rspec),) * 2
         out_specs = (row,) * nbank
         mapped = col.shard_map(body, mesh, in_specs, out_specs)
 
         @functools.partial(jax.jit,
                            donate_argnums=(0, 1, 2) if with_res else (0, 1))
-        def global_round(Y, M, R, key, W_intra, W_final, mask):
+        def global_round(Y, M, R, key, args, mask):
+            extras = tuple(args.mats)
+            if adaptive:
+                extras = extras + (args.tau_dev,)
             if with_res:
-                return mapped(Y, M, R, key, W_intra, W_final, mask, xs, ys)
-            Y, M = mapped(Y, M, key, W_intra, W_final, mask, xs, ys)
+                return mapped(Y, M, R, key, *extras, mask, xs, ys)
+            Y, M = mapped(Y, M, key, *extras, mask, xs, ys)
             return Y, M, R
 
         return global_round

@@ -60,7 +60,22 @@ def main(argv=None):
                     help="pytree: LM trainer with stacked replica pytrees; "
                          "bank: device-parallel flat (n, T) ModelBank "
                          "shards (classification workload)")
+    from repro.core.program import SCHEDULES
+    ap.add_argument("--schedule", choices=SCHEDULES, default="static",
+                    help="round schedule (RoundProgram IR, bank engine): "
+                         "static reproduces the paper's fixed tau/q/pi; "
+                         "adaptive_tau gives slow clusters fewer local "
+                         "steps; pi_decay runs deep gossip early, sparse "
+                         "late")
+    from repro.core.scenario import SCENARIOS
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default="",
+                    help="named wall-clock scenario (bank engine): device "
+                         "heterogeneity / client sampling / mobility — "
+                         "adaptive_tau needs a heterogeneous one to bite")
     args = ap.parse_args(argv)
+    if args.engine != "bank" and (args.schedule != "static"
+                                  or args.scenario):
+        ap.error("--schedule/--scenario require --engine bank")
 
     if args.engine == "bank":
         return run_bank_engine(args)
@@ -125,6 +140,7 @@ def run_bank_engine(args):
     """Drive ``ShardedBankCEFedAvg`` — one bank row per device — on
     synthetic federated classification data, logging loss/accuracy of the
     edge models per global round (the paper's evaluation protocol)."""
+    from repro.core.scenario import get_scenario
     from repro.core.sharded import ShardedBankCEFedAvg
     from repro.data.federated import (build_fl_data, dirichlet_partition,
                                       make_synthetic_classification)
@@ -150,12 +166,16 @@ def run_bank_engine(args):
     tx, ty = make_synthetic_classification(400, 16, 8, seed=1, noise=2.5)
     parts = dirichlet_partition(y, n, alpha=0.3, seed=0)
     data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    scenario = get_scenario(args.scenario) if args.scenario else None
+    schedule = None if args.schedule == "static" else args.schedule
     sim = ShardedBankCEFedAvg(
         lambda k: init_mlp_classifier(k, 16, 32, 8), apply_mlp_classifier,
-        fl, data, mesh, lr=args.lr, batch_size=args.batch, seed=0)
+        fl, data, mesh, lr=args.lr, batch_size=args.batch, seed=0,
+        scenario=scenario, schedule=schedule)
     print(f"bank engine: n={n} rows x T={sim.bank.layout.total} "
           f"({sim.bank.layout.row_nbytes} B/row), m={m} clusters, "
-          f"mesh={dict(mesh.shape)}")
+          f"mesh={dict(mesh.shape)}, schedule={args.schedule}"
+          + (f", scenario={args.scenario}" if args.scenario else ""))
     for r in range(args.rounds):
         t0 = time.time()
         sim.step_round()

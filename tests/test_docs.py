@@ -14,7 +14,8 @@ REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DOC_MODULES = ("repro.core.cefedavg", "repro.core.gossip",
                "repro.core.topology", "repro.core.scenario",
                "repro.core.clock", "repro.core.runtime",
-               "repro.core.modelbank", "repro.kernels.gossip_mix")
+               "repro.core.modelbank", "repro.core.program",
+               "repro.kernels.gossip_mix")
 
 
 @pytest.mark.parametrize("modname", DOC_MODULES)

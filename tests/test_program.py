@@ -1,0 +1,421 @@
+"""RoundProgram IR (ISSUE 5): validation, canonical compilation, engine
+lowerings (randomized-schedule fuzz parity legacy-pytree vs flat-bank vs
+compacted-cohort, including masked/mobility rounds), named schedules
+(adaptive τ_k, π_t decay) and the per-op event-clock cost hook."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, ScenarioConfig
+from repro.core.cefedavg import FLSimulator
+from repro.core.clock import (EventClock, program_comm_time,
+                              program_compute_time, run_wall_clock)
+from repro.core.compress import CompressionConfig
+from repro.core.program import (Compress, InterGossip, IntraMix, LocalSteps,
+                                MaskRenorm, Privatize, RoundProgram,
+                                adaptive_tau_map, block_runs,
+                                canonical_program, lowering_plan,
+                                make_schedule, resolve_matrices)
+from repro.core.runtime import (compute_bound_runtime_model,
+                                paper_runtime_model)
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+_FL = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+               devices_per_cluster=2, tau=2, q=2, pi=4, topology="ring")
+
+
+def _sim(fl, *, scenario=None, schedule=None, seed=0, bank=True,
+         compression=None):
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, data, lr=0.1, batch_size=16, seed=seed,
+        scenario=scenario, schedule=schedule, compression=compression,
+        bank=bank)
+
+
+def _params_close(a, b, atol=1e-6):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# IR structure + validation
+# ---------------------------------------------------------------------------
+
+def test_canonical_program_shape():
+    prog = canonical_program(_FL)
+    blocks = prog.blocks()
+    assert len(blocks) == _FL.q
+    assert all(b.local == LocalSteps(_FL.tau) for b in blocks)
+    assert all(b.mixes == (IntraMix(),) for b in blocks[:-1])
+    assert blocks[-1].mixes == (IntraMix(), InterGossip(_FL.pi))
+    assert prog.mask_renorm and not prog.has_upload and not prog.adaptive
+
+
+def test_canonical_program_upload_ops():
+    prog = canonical_program(_FL, privatize=True, compress=True)
+    b = prog.blocks()[0]
+    assert b.privatize and b.compress and b.upload
+    assert prog.has_upload
+
+
+def test_flconfig_round_program_hook():
+    """FLConfig compiles its τ/q/π knobs into the canonical program."""
+    assert _FL.round_program() == canonical_program(_FL)
+
+
+def test_program_validation_errors():
+    with pytest.raises(ValueError, match="at least one"):
+        RoundProgram((MaskRenorm(),))
+    with pytest.raises(ValueError, match="start a block"):
+        RoundProgram((IntraMix(),))
+    with pytest.raises(ValueError, match="no closing mixing"):
+        RoundProgram((LocalSteps(2), LocalSteps(2), IntraMix()))
+    with pytest.raises(ValueError, match="precede Compress"):
+        RoundProgram((LocalSteps(2), Compress(), Privatize(), IntraMix()))
+    with pytest.raises(ValueError, match="tau must be"):
+        RoundProgram((LocalSteps(0), IntraMix()))
+    with pytest.raises(ValueError, match="pi must be"):
+        RoundProgram((LocalSteps(1), InterGossip(0)))
+    with pytest.raises(ValueError, match="tau_dev"):
+        RoundProgram((LocalSteps(2, adaptive=True), IntraMix()))
+    with pytest.raises(ValueError, match="lie in"):
+        RoundProgram((LocalSteps(2, adaptive=True), IntraMix()),
+                     tau_dev=np.array([1, 3], np.int32))
+
+
+def test_signature_excludes_tau_dev():
+    """Re-binding per-device cutoffs must not change the compile key."""
+    a = RoundProgram((LocalSteps(3, adaptive=True), IntraMix()),
+                     tau_dev=np.array([1, 2], np.int32))
+    b = a.bind(np.array([3, 3], np.int32))
+    assert a.signature == b.signature and a == b
+    assert hash(a.ops) == hash(b.ops)
+    assert not np.array_equal(a.tau_dev, b.tau_dev)
+
+
+def test_lowering_plan_fusion_policy():
+    prog = canonical_program(_FL)
+    fused = lowering_plan(prog, fuse=True)
+    assert [len(bp.groups) for bp in fused] == [1] * _FL.q
+    assert len(fused[-1].groups[0].ops) == 2     # τ∘qτ fused to one pass
+    seq = lowering_plan(prog, fuse=False)
+    assert [len(bp.groups) for bp in seq] == [1] * (_FL.q - 1) + [2]
+    # upload path: the first mix applies to the delta — never fused
+    up = lowering_plan(canonical_program(_FL, compress=True), fuse=True)
+    assert len(up[-1].groups) == 2
+    assert up[-1].groups[0].ops == (IntraMix(),)
+
+
+def test_block_runs_collapse_identical_blocks():
+    prog = canonical_program(dataclasses.replace(_FL, q=5))
+    runs = block_runs(lowering_plan(prog, fuse=True))
+    assert [c for _, c in runs] == [4, 1]
+
+
+def test_resolve_matrices_fuses_products():
+    from repro.core.cefedavg import make_w_schedule
+    sched = make_w_schedule(_FL)
+    plans = lowering_plan(canonical_program(_FL), fuse=True)
+    mats = resolve_matrices(plans, sched.W_intra, lambda pi: sched.W_inter)
+    assert len(mats) == 2                         # scan run + final block
+    np.testing.assert_allclose(mats[0], sched.W_intra, atol=0)
+    np.testing.assert_allclose(mats[1], sched.W_inter @ sched.W_intra,
+                               atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# canonical lowering == implicit static schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bank", [True, False])
+def test_static_schedule_matches_default(bank):
+    """schedule="static" routes through the ScheduleFn hook but must
+    reproduce the default (no-schedule) trajectory bit-for-bit."""
+    a = _sim(_FL, bank=bank)
+    b = _sim(_FL, schedule="static", bank=bank)
+    a.run(2)
+    b.run(2)
+    _params_close(a.params, b.params, atol=0)
+
+
+def test_fixed_round_program_as_schedule():
+    """A RoundProgram instance is accepted directly as the schedule."""
+    prog = canonical_program(_FL)
+    a, b = _sim(_FL), _sim(_FL, schedule=prog)
+    a.run(2)
+    b.run(2)
+    _params_close(a.params, b.params, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# randomized-schedule fuzz: the three single-host lowerings must agree
+# ---------------------------------------------------------------------------
+
+def random_program(rng: np.random.Generator, n: int,
+                   allow_upload: bool = False) -> RoundProgram:
+    """A random valid program: 1–3 blocks of random τ/lr_scale/adaptive
+    local steps, random mixing boundaries (including mid-program gossip
+    and non-canonical π), always MaskRenorm so masked rounds use the
+    renormalized operators the scenario engine asserts elsewhere."""
+    ops = [MaskRenorm()]
+    nblocks = int(rng.integers(1, 4))
+    any_adaptive = False
+    max_tau = 1
+    for i in range(nblocks):
+        tau = int(rng.integers(1, 4))
+        adaptive = bool(rng.random() < 0.4)
+        any_adaptive |= adaptive
+        max_tau = max(max_tau, tau) if adaptive else max_tau
+        ops.append(LocalSteps(tau,
+                              lr_scale=float(rng.choice([1.0, 0.5])),
+                              adaptive=adaptive))
+        if allow_upload and rng.random() < 0.5:
+            ops.append(Compress())
+        last = i == nblocks - 1
+        choice = rng.integers(0, 3)
+        if last or choice == 0:
+            ops.append(IntraMix())
+            if last or rng.random() < 0.3:
+                ops.append(InterGossip(int(rng.integers(1, 4))))
+        elif choice == 1:
+            ops.append(IntraMix())
+        else:
+            ops.append(InterGossip(int(rng.integers(1, 3))))
+    tau_dev = (rng.integers(1, max_tau + 1, size=n).astype(np.int32)
+               if any_adaptive else None)
+    return RoundProgram(tuple(ops), tau_dev=tau_dev)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fuzz_legacy_vs_flat_full_participation(seed):
+    """Same random program, same keys: the legacy pytree and flat-bank
+    lowerings must produce the same trajectory (~1e-7-grade float32
+    agreement) — the IR acceptance bar, on arbitrary programs rather
+    than just the canonical one."""
+    rng = np.random.default_rng(seed)
+    prog = random_program(rng, _FL.n)
+    sb = _sim(_FL, schedule=prog)
+    sl = _sim(_FL, schedule=prog, bank=False)
+    for _ in range(2):
+        sb.step_round()
+        sl.step_round()
+    _params_close(sb.params, sl.params)
+    _params_close(sb.mom, sl.mom)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_fuzz_legacy_vs_flat_masked_mobility(seed):
+    """Fuzz parity under a non-trivial scenario: partial cohorts route
+    the flat engine through the compacted lowering (plain programs), so
+    this exercises all three single-host lowerings on one trajectory."""
+    rng = np.random.default_rng(100 + seed)
+    prog = random_program(rng, _FL.n)
+    sc = ScenarioConfig(speed_dist="lognormal", speed_spread=0.6,
+                        sample_fraction=0.6, dropout_prob=0.2,
+                        move_prob=0.3, seed=seed)
+    sb = _sim(_FL, scenario=sc, schedule=prog)
+    sl = _sim(_FL, scenario=sc, schedule=prog, bank=False)
+    compacted = False
+    for _ in range(3):
+        sb.step_round()
+        sl.step_round()
+        compacted |= sb.last_bucket < sb.bank.n
+    assert compacted, "fuzz scenario never dispatched the compact round"
+    _params_close(sb.params, sl.params)
+
+
+def test_fuzz_upload_program_with_compression():
+    """Programs with Compress ops agree across engines on the EF
+    residual too (flat vs pytree upload key schedules)."""
+    rng = np.random.default_rng(42)
+    prog = random_program(rng, _FL.n, allow_upload=True)
+    while not prog.has_upload:
+        prog = random_program(rng, _FL.n, allow_upload=True)
+    comp = CompressionConfig("topk", topk_frac=0.25)
+    sb = _sim(_FL, schedule=prog, compression=comp)
+    sl = _sim(_FL, schedule=prog, compression=comp, bank=False)
+    for _ in range(2):
+        sb.step_round()
+        sl.step_round()
+    _params_close(sb.params, sl.params)
+    if sb.residual is not None:
+        _params_close(sb.residual, sl.residual)
+
+
+def test_schedule_fn_can_vary_program_per_round():
+    """A ScheduleFn may return a different structure each round; every
+    distinct signature compiles once and replays from cache."""
+    p1 = canonical_program(_FL)
+    p2 = canonical_program(dataclasses.replace(_FL, pi=2))
+
+    def fn(r, plan):
+        return p1 if r % 2 == 0 else p2
+    s = _sim(_FL, schedule=fn)
+    for _ in range(4):
+        s.step_round()
+    assert len(s._lowered) == 2
+    sigs = {sig for _, sig in s._lowered}
+    assert sigs == {p1.signature, p2.signature}
+
+
+# ---------------------------------------------------------------------------
+# named schedules
+# ---------------------------------------------------------------------------
+
+def test_adaptive_tau_map_scales_with_cluster_speed():
+    labels = np.array([0, 0, 1, 1])
+    mask = np.ones(4)
+    mult = np.array([1.0, 1.0, 0.25, 0.5])
+    td = adaptive_tau_map(4, labels, mask, mult, 2)
+    assert td.tolist() == [4, 4, 1, 1]     # slow cluster: min speed 0.25
+    # a masked-out straggler no longer drags its cluster down
+    td2 = adaptive_tau_map(4, labels, np.array([1, 1, 0, 1.0]), mult, 2)
+    assert td2.tolist() == [4, 4, 2, 2]
+
+
+def test_adaptive_tau_homogeneous_reduces_to_static():
+    fl = _FL
+    sched = make_schedule("adaptive_tau", fl, speeds=np.ones(fl.n))
+    prog = sched(0, None)
+    assert prog.adaptive
+    assert prog.tau_dev.tolist() == [fl.tau] * fl.n
+    a, b = _sim(fl), _sim(fl, schedule=sched)
+    a.run(2)
+    b.run(2)
+    _params_close(a.params, b.params)
+
+
+def test_pi_decay_switches_depth():
+    sched = make_schedule("pi_decay", _FL, decay_round=2, pi_late=1)
+    early = [op.pi for op in sched(0, None).ops
+             if isinstance(op, InterGossip)]
+    late = [op.pi for op in sched(5, None).ops
+            if isinstance(op, InterGossip)]
+    assert early == [_FL.pi] and late == [1]
+
+
+def test_unknown_schedule_name_raises():
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("nope", _FL)
+
+
+# ---------------------------------------------------------------------------
+# per-op clock cost hook
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,dpc", [
+    ("ce_fedavg", 4), ("hier_favg", 4), ("fedavg", 4), ("local_edge", 4),
+    ("dec_local_sgd", 1)])
+def test_canonical_program_charge_matches_charge_round(algo, dpc):
+    """The per-op pricing reduces to eq. 8 / the §6.1 per-algorithm
+    formulas on the canonical program — to the last term."""
+    fl = FLConfig(algorithm=algo, num_clusters=4, devices_per_cluster=dpc,
+                  tau=2, q=4, pi=10)
+    rt = paper_runtime_model()
+    a = EventClock(rt, fl).charge_round()
+    b = EventClock(rt, fl).charge_program(canonical_program(fl))
+    assert a == pytest.approx(b, rel=1e-12)
+
+
+@pytest.mark.parametrize("algo,dpc", [
+    ("ce_fedavg", 4), ("hier_favg", 4), ("fedavg", 4), ("local_edge", 4),
+    ("dec_local_sgd", 1)])
+def test_canonical_charge_parity_with_compressed_uplink(algo, dpc):
+    """uplink_ratio != 1 (compression) must price identically to
+    RuntimeModel.comm_time — hier_favg's cloud hop carries the FULL
+    model, only device→edge uploads shrink."""
+    fl = FLConfig(algorithm=algo, num_clusters=4, devices_per_cluster=dpc,
+                  tau=2, q=4, pi=10)
+    rt = paper_runtime_model()
+    a = EventClock(rt, fl).charge_round(uplink_ratio=0.5)
+    b = EventClock(rt, fl).charge_program(canonical_program(fl),
+                                          uplink_ratio=0.5)
+    assert a == pytest.approx(b, rel=1e-12)
+
+
+def test_adaptive_charge_caps_at_each_blocks_tau():
+    """tau_dev is bounded by the max adaptive tau across blocks; a block
+    with a smaller tau executes (and must be charged) at most its own
+    tau steps."""
+    prog = RoundProgram(
+        (LocalSteps(2, adaptive=True), IntraMix(),
+         LocalSteps(4, adaptive=True), IntraMix(), InterGossip(1)),
+        tau_dev=np.array([4, 4], np.int32))
+    rt = compute_bound_runtime_model()
+    got = program_compute_time(rt, prog)
+    per_step = rt.wl.flops_per_step / rt.hw.device_flops
+    assert got == pytest.approx((2 + 4) * per_step, rel=1e-12)
+
+
+def test_adaptive_program_charges_fewer_compute_seconds():
+    fl = dataclasses.replace(_FL, tau=4)
+    rt = compute_bound_runtime_model()
+    mult = np.r_[np.full(2, 0.2), np.full(fl.n - 2, 1.0)]
+    speeds = mult * rt.hw.device_flops
+    static = program_compute_time(rt, canonical_program(fl), speeds)
+    prog = make_schedule("adaptive_tau", fl, speeds=mult)(0, None)
+    adapt = program_compute_time(rt, prog, speeds)
+    assert adapt < static / 2
+
+
+def test_pi_decay_charges_fewer_comm_seconds():
+    rt = paper_runtime_model()
+    sched = make_schedule("pi_decay", _FL, decay_round=1, pi_late=1)
+    hi = program_comm_time(rt, "ce_fedavg", sched(0, None))
+    lo = program_comm_time(rt, "ce_fedavg", sched(3, None))
+    W = rt.wl.model_bits(rt.hw)
+    assert hi - lo == pytest.approx((_FL.pi - 1) * W / rt.hw.b_e2e)
+
+
+def test_run_wall_clock_charges_adaptive_rounds_cheaper():
+    """End to end: identical fleet + seeds, adaptive-τ schedule, the
+    wall-clock harness charges less time per round than static."""
+    sc = ScenarioConfig(speed_dist="bimodal", slow_fraction=0.25,
+                        slow_factor=0.2, seed=1)
+    fl = dataclasses.replace(_FL, tau=4, q=1)
+    rt = compute_bound_runtime_model()
+    t_static = run_wall_clock(_sim(fl, scenario=sc), rt, 2)
+    t_adapt = run_wall_clock(
+        _sim(fl, scenario=sc, schedule="adaptive_tau"), rt, 2)
+    assert t_adapt["wall_time"][-1] < t_static["wall_time"][-1]
+
+
+# ---------------------------------------------------------------------------
+# adaptive-τ execution semantics
+# ---------------------------------------------------------------------------
+
+def test_tau_dev_cutoff_freezes_devices_mid_block():
+    """A device whose cutoff is k must leave the block with exactly the
+    state it had after its k-th step — frozen like a masked device —
+    checked by comparing against a plain run with tau=cutoff."""
+    fl = dataclasses.replace(_FL, tau=3, q=1, pi=1, num_clusters=1,
+                             devices_per_cluster=2)
+    cut = RoundProgram(
+        (MaskRenorm(), LocalSteps(3, adaptive=True), IntraMix(),
+         InterGossip(1)),
+        tau_dev=np.array([3, 1], np.int32))
+    s = _sim(fl, schedule=cut)
+    ref = _sim(fl)
+    s.step_round()
+    ref.step_round()
+    # device 0 ran all 3 steps with the same keys as the static run
+    for la, lb in zip(jax.tree.leaves(s.mom), jax.tree.leaves(ref.mom)):
+        np.testing.assert_allclose(np.asarray(la)[0], np.asarray(lb)[0],
+                                   atol=1e-6)
+        # device 1 stopped after step 1: its momentum differs
+    diffs = [float(np.abs(np.asarray(la)[1] - np.asarray(lb)[1]).max())
+             for la, lb in zip(jax.tree.leaves(s.mom),
+                               jax.tree.leaves(ref.mom))]
+    assert max(diffs) > 0

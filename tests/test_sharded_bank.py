@@ -157,8 +157,9 @@ def test_gossip_boundary_is_ppermute_not_allgather(mesh):
     materialize the full (n, T) bank on every device."""
     _, sb = _pair(_FL, mesh)
     b = sb.bank
+    args = sb._resolve_args(sb._canonical, None, fuse=True)
     hlo = sb._round_flat.lower(
-        b.params, b.mom, None, sb.key, sb._W_intra_j, sb._W_comb_j,
+        b.params, b.mom, None, sb.key, args,
         sb._full_mask).compile().as_text()
     assert "collective-permute" in hlo, "gossip boundary lost its ppermutes"
     assert "all-gather" not in hlo, \
@@ -202,3 +203,70 @@ def test_mesh_guards():
     with pytest.raises(AssertionError, match="not tensor-parallel"):
         ShardedBankCEFedAvg(init, apply_mlp_classifier, fl, _data(fl),
                             mesh_mp)
+
+
+# ---------------------------------------------------------------------------
+# RoundProgram lowering parity (ISSUE 5): arbitrary programs, sharded
+# ---------------------------------------------------------------------------
+
+def _random_program(seed, n):
+    from test_program import random_program
+    return random_program(np.random.default_rng(seed), n)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_program_fuzz_parity_static(mesh, seed):
+    """Randomized-schedule fuzz: the sharded lowering (psum + per-π
+    ppermute matchings, cluster-mean dedupe at fused boundaries) must
+    reproduce the single-device flat lowering on the same program."""
+    prog = _random_program(seed, _FL.n)
+    ref, sb = _pair(_FL, mesh, schedule=prog)
+    for _ in range(2):
+        ref.step_round()
+        sb.step_round()
+    assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
+    assert _maxdiff(ref.bank.mom, sb.bank.mom) < ATOL
+
+
+def test_program_fuzz_parity_scenario(mesh):
+    """Masked/mobility rounds of a random program take the dense-rotation
+    path; trajectories still match the single-device engine."""
+    prog = _random_program(7, _FL.n)
+    sc = ScenarioConfig(name="t", speed_dist="lognormal", speed_spread=0.6,
+                        sample_fraction=0.75, move_prob=0.3, seed=5)
+    ref, sb = _pair(_FL, mesh, scenario=sc, schedule=prog)
+    for _ in range(3):
+        p1 = ref.step_round()
+        p2 = sb.step_round()
+        assert np.array_equal(p1.mask, p2.mask)
+    assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
+
+
+def test_adaptive_tau_schedule_parity(mesh):
+    """The adaptive-τ_k schedule (per-device tau_dev cutoffs threaded as
+    a replicated operand into the shard_map body) matches the
+    single-device engine under a heterogeneous scenario."""
+    sc = ScenarioConfig(name="t", speed_dist="lognormal", speed_spread=0.6,
+                        seed=9)
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=4, q=2, pi=4, topology="ring")
+    ref, sb = _pair(fl, mesh, scenario=sc, schedule="adaptive_tau")
+    for _ in range(2):
+        ref.step_round()
+        sb.step_round()
+    assert ref.last_program.adaptive
+    assert np.array_equal(ref.last_program.tau_dev,
+                          sb.last_program.tau_dev)
+    assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
+
+
+def test_pi_decay_schedule_parity_and_recompile_bound(mesh):
+    """π_t decay: the sharded lowering rebuilds its GossipSchedule per
+    distinct π (structured path) — exactly two compiled variants."""
+    ref, sb = _pair(_FL, mesh, schedule="pi_decay")
+    for _ in range(3):
+        ref.step_round()
+        sb.step_round()
+    assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
+    # decay_round=5 default: only the early program compiled so far
+    assert len(sb._lowered) == 1
