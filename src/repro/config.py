@@ -146,12 +146,30 @@ class FLConfig:
     #   ringweight exact H^π in M−1 weighted cyclic rotations
     gossip_impl: str = "dense"
     cluster_axis: str = "data"     # mesh axis along which replicas/clusters live
+    # depth>2 hierarchies: branching factors root→leaf, e.g. (2, 2, 2) =
+    # 2 regions × 2 edges × 2 devices. () keeps the paper's two tiers
+    # (num_clusters, devices_per_cluster). When set, the last entry must
+    # equal devices_per_cluster and the product of the rest num_clusters,
+    # so the depth-2 projection of the hierarchy IS the existing config.
+    hierarchy: Tuple[int, ...] = ()
 
     GOSSIP_IMPLS = ("dense", "sparse", "ringweight")
 
     @property
     def n(self) -> int:
         return self.num_clusters * self.devices_per_cluster
+
+    @property
+    def tiers(self) -> Tuple[int, ...]:
+        """Resolved branching factors root→leaf: ``hierarchy`` when set,
+        else the two-tier ``(num_clusters, devices_per_cluster)``."""
+        return tuple(self.hierarchy) or (self.num_clusters,
+                                         self.devices_per_cluster)
+
+    @property
+    def depth(self) -> int:
+        """Number of hierarchy tiers (2 for the paper's device→edge)."""
+        return len(self.tiers)
 
     def round_program(self, *, privatize: bool = False,
                       compress: bool = False):
@@ -179,6 +197,25 @@ class FLConfig:
         if self.topology == "erdos_renyi":
             assert 0.0 < self.er_prob <= 1.0, \
                 f"er_prob must be in (0, 1], got {self.er_prob}"
+        if self.hierarchy:
+            tiers = tuple(self.hierarchy)
+            assert len(tiers) >= 2, \
+                f"hierarchy needs >= 2 tiers, got {tiers}"
+            assert all(t >= 1 for t in tiers), \
+                f"hierarchy branching factors must be >= 1: {tiers}"
+            prod = 1
+            for t in tiers[:-1]:
+                prod *= t
+            assert prod == self.num_clusters, \
+                f"prod(hierarchy[:-1])={prod} != num_clusters=" \
+                f"{self.num_clusters}"
+            assert tiers[-1] == self.devices_per_cluster, \
+                f"hierarchy[-1]={tiers[-1]} != devices_per_cluster=" \
+                f"{self.devices_per_cluster}"
+            if len(tiers) > 2:
+                assert self.algorithm == "ce_fedavg", \
+                    "depth>2 hierarchies exist for ce_fedavg only " \
+                    f"(got {self.algorithm!r})"
         if self.gossip_impl in ("sparse", "ringweight"):
             # the sparse backends lower the inter-cluster operator with
             # collectives; that path exists for the gossip algorithms only

@@ -84,7 +84,11 @@ def make_w_schedule(fl: FLConfig) -> WSchedule:
     V = topo.intra_cluster_operator(sizes)
     A = np.ones((n, n)) / n
     eye = np.eye(n)
-    adj = topo.build_adjacency(fl.topology, m, fl)
+    # tier-1 backhaul graph: one topology graph over all m edges at depth
+    # 2 (the paper), block-diagonal per-parent graphs for deeper
+    # hierarchies (kron(I, H_block) — see topology.Hierarchy)
+    hier = topo.Hierarchy.from_config(fl)
+    adj = hier.adjacency(1, fl.topology, fl)
     H = topo.mixing_matrix(adj, fl.mixing)
     if fl.algorithm == "ce_fedavg":
         W_intra, W_inter = V, topo.inter_cluster_operator(sizes, H, fl.pi)
@@ -179,8 +183,7 @@ class FLSimulator:
         # to devices and disables it, running mask-frozen full rows instead
         self._compact_enabled = True
         if bank:
-            self.bank = ModelBank.from_model(one, n,
-                                             with_residual=with_residual)
+            self.bank = self._make_bank(one, n, with_residual)
             self._buckets = cohort_buckets(n)
         else:
             self._params = jax.tree.map(
@@ -212,9 +215,19 @@ class FLSimulator:
         self._lowered: Dict = {}       # (engine kind, signature) -> jitted
         self._static_mats: Dict = {}   # (fuse, signature) -> resolved mats
         self._inter_static: Dict = {fl.pi: self.sched.W_inter}
+        # depth>2 tiers: static TierMix operators / H_ℓ, cached per level
+        self._hier = topo.Hierarchy.from_config(fl)
+        self._tier_static: Dict = {}
         self._static_labels = self.labels.copy()
         self.key = jax.random.PRNGKey(seed + 1)
         self._eval_fn = self._build_eval()
+
+    def _make_bank(self, one, n: int, with_residual: bool) -> ModelBank:
+        """Bank construction hook: the single-process engine broadcasts
+        the shared init on the default device; the sharded engine
+        (core/sharded.py) overrides this with per-shard init via
+        ``ModelBank.from_model_sharded``."""
+        return ModelBank.from_model(one, n, with_residual=with_residual)
 
     # -- state as pytrees (both engines) ------------------------------------
     @property
@@ -626,6 +639,52 @@ class FLSimulator:
                              np.ones(self.sched.n), self._scenario_h(),
                              pi=pi)[1]
 
+    def _tier_operator(self, op: prg.TierMix, plan, renorm: bool):
+        """The (n, n) dense operator of any ``TierMix`` this round.
+
+        Levels 0/1 delegate to the existing intra/inter resolvers (the
+        paper's two tiers, including the masked scenario forms). Deeper
+        tiers build B_ℓ^T diag(c) H_ℓ^π B_ℓ from the hierarchy: static
+        rounds cache the contiguous-assignment operator per (level, pi);
+        scenario rounds recompose it from the plan's device→edge labels
+        lifted to tier-ℓ nodes (mobility composes, participation masks
+        renormalize)."""
+        hier = self._hier
+        if not (0 <= op.level < hier.depth):
+            raise ValueError(
+                f"TierMix level {op.level} outside hierarchy of depth "
+                f"{hier.depth} (tiers {hier.levels})")
+        if op.level == 0:
+            if plan is None:
+                return self.sched.W_intra
+            if renorm:
+                return plan.W_intra
+            from repro.core.scenario import make_masked_w
+            return make_masked_w(self.fl, plan.labels,
+                                 np.ones(self.sched.n),
+                                 self._scenario_h())[0]
+        if op.level == 1:
+            return self._inter_operator(op.pi, plan, renorm)
+        ck = ("H", op.level)
+        H_l = self._tier_static.get(ck)
+        if H_l is None:
+            H_l = hier.mixing(op.level, self.fl.topology, self.fl.mixing,
+                              self.fl)
+            self._tier_static[ck] = H_l
+        if plan is None:
+            key = (op.level, op.pi)
+            W = self._tier_static.get(key)
+            if W is None:
+                W = hier.tier_operator(op.level, op.pi, self.fl.topology,
+                                       self.fl.mixing, self.fl)
+                self._tier_static[key] = W
+            return W
+        B = topo.assignment_matrix(
+            hier.node_labels(op.level, plan.labels),
+            hier.num_nodes(op.level))
+        return topo.masked_inter_operator(
+            B, H_l, op.pi, plan.mask if renorm else None)
+
     def _resolve_args(self, program: prg.RoundProgram, plan,
                       fuse: bool) -> prg.RoundArgs:
         """Concrete runtime operands (mixing matrices + adaptive step
@@ -639,7 +698,9 @@ class FLSimulator:
             if mats is None:
                 mats = tuple(jnp.asarray(m) for m in prg.resolve_matrices(
                     plans, self.sched.W_intra,
-                    lambda pi: self._inter_operator(pi, None, renorm)))
+                    lambda pi: self._inter_operator(pi, None, renorm),
+                    tier_of=lambda op: self._tier_operator(
+                        op, None, renorm)))
                 self._static_mats[ck] = mats
         else:
             if renorm:
@@ -651,7 +712,8 @@ class FLSimulator:
                                         self._scenario_h())[0]
             mats = tuple(jnp.asarray(m) for m in prg.resolve_matrices(
                 plans, W_intra,
-                lambda pi: self._inter_operator(pi, plan, renorm)))
+                lambda pi: self._inter_operator(pi, plan, renorm),
+                tier_of=lambda op: self._tier_operator(op, plan, renorm)))
         tau_dev = (jnp.asarray(program.tau_dev, jnp.int32)
                    if program.adaptive else None)
         return prg.RoundArgs(mats, tau_dev)

@@ -16,10 +16,19 @@ Rounds driven by a :class:`repro.core.program.RoundProgram` are charged
 :func:`program_compute_time` prices each ``LocalSteps`` op by the
 max-over-participants rule — with per-device ``tau_dev`` cutoffs for
 adaptive programs, which is exactly why adaptive-τ_k shortens rounds —
-and :func:`program_comm_time` prices each mixing boundary
-(``IntraMix`` → device→edge upload, ``InterGossip(π)`` → π backhaul
-gossip exchanges, specialized per algorithm as in §6.1). The canonical
-program reproduces ``charge_round`` to the last term.
+and :func:`program_comm_time` prices each mixing boundary by tier
+(``TierMix(0)``/``IntraMix`` → device→edge upload, ``TierMix(ℓ>=1, π)``
+→ π exchanges over that tier's links — ``b_e2e`` for the backhaul,
+``HardwareProfile.b_tiers`` overrides above it — specialized per
+algorithm as in §6.1). The canonical program reproduces
+``charge_round`` to the last term.
+
+:func:`run_wall_clock` also closes the online-schedule feedback loop:
+after charging a round it reports the realized per-device step counts
+and compute seconds to the schedule's
+:class:`repro.core.program.OnlineSpeedEstimator` (if the simulator's
+schedule exposes one), which is how ``"adaptive_tau_online"`` learns
+cluster speeds without oracle access.
 """
 from __future__ import annotations
 
@@ -71,15 +80,42 @@ def program_compute_time(rt: RuntimeModel, program: "prg.RoundProgram",
     return total
 
 
+def program_device_steps(program: "prg.RoundProgram", n: int) -> np.ndarray:
+    """(n,) local SGD steps each device executes in one round of
+    ``program``: Σ over blocks of the block's τ, respecting per-device
+    ``tau_dev`` cutoffs of adaptive blocks — the step counts the online
+    speed estimator pairs with realized compute times."""
+    steps = np.zeros(n)
+    tau_dev = program.tau_dev
+    for b in program.blocks():
+        op = b.local
+        if op.adaptive and tau_dev is not None:
+            steps += np.minimum(np.asarray(tau_dev, float), float(op.tau))
+        else:
+            steps += float(op.tau)
+    return steps
+
+
+def program_device_times(rt: RuntimeModel, program: "prg.RoundProgram",
+                         speeds: np.ndarray) -> np.ndarray:
+    """(n,) compute seconds each device spends in one round of
+    ``program`` at per-device FLOP/s ``speeds`` — what an EventClock
+    observes per device (steps_d·C/c_d)."""
+    return (program_device_steps(program, len(speeds))
+            * rt.wl.flops_per_step / np.asarray(speeds, float))
+
+
 def program_comm_time(rt: RuntimeModel, algorithm: str,
                       program: "prg.RoundProgram",
                       uplink_ratio: float = 1.0) -> float:
     """Communication seconds of one programmed round, priced per mixing
-    op with the §6.1 per-algorithm adaptation:
+    op with the §6.1 per-algorithm adaptation (a mix is classified by
+    its tier: level 0 = IntraMix, level >= 1 = inter-tier gossip):
 
-    - ``ce_fedavg``: every IntraMix is a device→edge upload
-      (W_u/b_d2e); every InterGossip(π) is π backhaul exchanges
-      (π·W/b_e2e).
+    - ``ce_fedavg``: every TierMix(0) is a device→edge upload
+      (W_u/b_d2e); every TierMix(ℓ>=1, π) is π exchanges over tier ℓ's
+      links (π·W/tier_bandwidth(ℓ) — b_e2e for the backhaul,
+      ``b_tiers`` overrides above it).
     - ``hier_favg``: an InterGossip is a device→cloud upload (W/b_d2c)
       that *replaces* the coincident intra upload in its block.
     - ``fedavg``: IntraMix is the identity (free); InterGossip is the
@@ -95,11 +131,12 @@ def program_comm_time(rt: RuntimeModel, algorithm: str,
     Wu = W * uplink_ratio
     t = 0.0
     for b in program.blocks():
-        n_intra = sum(isinstance(m, prg.IntraMix) for m in b.mixes)
-        inters = [m for m in b.mixes if isinstance(m, prg.InterGossip)]
+        n_intra = sum(m.level == 0 for m in b.mixes)
+        inters = [m for m in b.mixes if m.level >= 1]
         if algorithm == "ce_fedavg":
             t += n_intra * Wu / hw.b_d2e
-            t += sum(m.pi for m in inters) * W / hw.b_e2e
+            t += sum(m.pi * W / hw.tier_bandwidth(m.level)
+                     for m in inters)
         elif algorithm == "hier_favg":
             # cloud hop carries the full model (uncompressed), matching
             # RuntimeModel.comm_time's (q-1)·Wu/b_d2e + W/b_d2c
@@ -197,6 +234,18 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
             speeds = (None if fleet is None
                       else fleet[np.asarray(plan.mask) > 0])
             t = clock.charge_round(speeds, uplink_ratio)
+        # online-schedule feedback: report the realized per-device step
+        # counts and compute seconds this round to the schedule's
+        # estimator (the "adaptive_tau_online" loop)
+        est = getattr(getattr(sim, "_schedule_fn", None), "estimator",
+                      None)
+        if est is not None and program is not None:
+            fleet_v = (fleet if fleet is not None
+                       else np.full(sim.fl.n, rt.hw.device_flops))
+            steps = program_device_steps(program, sim.fl.n)
+            times = steps * rt.wl.flops_per_step / fleet_v
+            est.observe(steps, times,
+                        None if plan is None else plan.mask)
         if (r + 1) % eval_every == 0:
             sim_s = time.perf_counter() - window_t0
             acc, loss = sim.evaluate(eval_batch)

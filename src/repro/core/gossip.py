@@ -224,21 +224,35 @@ def apply_gossip(sched: GossipSchedule, params, specs, mesh: Mesh):
     return col.shard_map(body, mesh, (specs,), specs)(params)
 
 
+def group_mean_in_body(mesh: Mesh, p, groups):
+    """Mean of the LOCAL f32 shard over arbitrary equal-size replica
+    groups inside an existing ``shard_map`` body: one grouped psum per
+    leaf over the flat replica axis. ``groups`` is a partition of the
+    replica ids (e.g. a :class:`repro.core.groups.TierGroups` member
+    list); each group averages over its own members only."""
+    size = len(groups[0])
+    if size == 1:
+        return p
+    groups = [list(g) for g in groups]
+    inv = 1.0 / size
+    return jax.tree.map(
+        lambda x: col.psum_groups(x, mesh, groups) * inv, p)
+
+
 def cluster_mean_in_body(mesh: Mesh, p, num_clusters: int,
                          devices_per_cluster: int):
     """Intra-cluster averaging of the LOCAL f32 shard inside an existing
     ``shard_map`` body: one grouped psum per leaf over the flat replica
     axis (eq. 11's V restricted to this shard). Shared by
     :func:`apply_cluster_mean` and the sharded ModelBank engine's fused
-    τ/qτ boundary."""
+    τ/qτ boundary. Thin wrapper over :func:`group_mean_in_body` with the
+    contiguous per-cluster partition."""
     dpc = devices_per_cluster
     if dpc == 1:
         return p
-    groups = [list(range(c * dpc, (c + 1) * dpc))
+    groups = [tuple(range(c * dpc, (c + 1) * dpc))
               for c in range(num_clusters)]
-    inv = 1.0 / dpc
-    return jax.tree.map(
-        lambda x: col.psum_groups(x, mesh, groups) * inv, p)
+    return group_mean_in_body(mesh, p, groups)
 
 
 def apply_cluster_mean(params, specs, mesh: Mesh, num_clusters: int,

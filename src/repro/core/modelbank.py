@@ -61,6 +61,40 @@ class ModelBank:
         return cls(layout, n, layout.flatten_one(one_model),
                    with_residual=with_residual)
 
+    @classmethod
+    def from_model_sharded(cls, one_model, n: int, sharding, *,
+                           with_residual: bool = False) -> "ModelBank":
+        """Shared-init bank built per-shard via
+        ``jax.make_array_from_callback``: each device fills only its own
+        ``(rows_per_device, T)`` slice by broadcasting the host-side init
+        row, so the full (n, T) bank is NEVER materialized on one device
+        — the multi-host-correct init path (the old build-then-``place``
+        route allocates the whole bank on the default device first)."""
+        layout = FlatLayout.for_tree(one_model)
+        self = cls.__new__(cls)
+        self.layout = layout
+        self.n = n
+        T = layout.total
+        row = np.asarray(layout.flatten_one(one_model), np.float32)
+
+        def shard_rows(idx):
+            nrows = len(range(*idx[0].indices(n)))
+            return np.broadcast_to(row[idx[1]], (nrows,) + row[idx[1]].shape)
+
+        def shard_zeros(idx):
+            nrows = len(range(*idx[0].indices(n)))
+            ncols = len(range(*idx[1].indices(T)))
+            return np.zeros((nrows, ncols), np.float32)
+
+        self.params = jax.make_array_from_callback((n, T), sharding,
+                                                   shard_rows)
+        self.mom = jax.make_array_from_callback((n, T), sharding,
+                                                shard_zeros)
+        self.residual = (jax.make_array_from_callback((n, T), sharding,
+                                                      shard_zeros)
+                         if with_residual else None)
+        return self
+
     # -- placement -----------------------------------------------------------
     def place(self, sharding) -> None:
         """Re-place the resident buffers onto ``sharding`` — e.g. the

@@ -74,16 +74,49 @@ class LocalSteps:
     adaptive: bool = False
 
 
-@dataclasses.dataclass(frozen=True)
-class IntraMix:
-    """Apply the intra-cluster averaging operator V (eq. 11)."""
+@dataclasses.dataclass(frozen=True, eq=False)
+class TierMix:
+    """Apply hierarchy tier ``level``'s mixing operator: average each
+    tier group, then (for ``level >= 1``) run ``pi`` gossip steps of
+    that tier's block-diagonal backhaul mixing among sibling groups
+    (``topology.Hierarchy``). ``TierMix(0)`` is the intra-cluster V and
+    ``TierMix(1, π)`` the paper's B^T diag(c) H^π B — :class:`IntraMix`
+    and :class:`InterGossip` are sugar for exactly those two, and
+    compare/hash equal to them, so depth-2 programs are unchanged.
+    Levels >= 2 (region, ...) need an ``FLConfig.hierarchy`` of matching
+    depth; the engines validate that at resolve time."""
+    level: int
+    pi: int = 1
+
+    def __eq__(self, other):
+        return (isinstance(other, TierMix)
+                and (self.level, self.pi) == (other.level, other.pi))
+
+    def __hash__(self):
+        return hash(("TierMix", self.level, self.pi))
 
 
-@dataclasses.dataclass(frozen=True)
-class InterGossip:
+class IntraMix(TierMix):
+    """Apply the intra-cluster averaging operator V (eq. 11) — sugar
+    for ``TierMix(0)``."""
+
+    def __init__(self):
+        super().__init__(0, 1)
+
+    def __repr__(self):
+        return "IntraMix()"
+
+
+class InterGossip(TierMix):
     """Apply the inter-cluster operator built with THIS op's ``pi``
-    gossip steps (eq. 11's B^T diag(c) H^π B)."""
-    pi: int
+    gossip steps (eq. 11's B^T diag(c) H^π B) — sugar for
+    ``TierMix(1, pi)``."""
+
+    def __init__(self, pi: int):
+        super().__init__(1, pi)
+
+    def __repr__(self):
+        return f"InterGossip(pi={self.pi})"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,9 +135,8 @@ class MaskRenorm:
     over the participation mask (``scenario.make_masked_w``)."""
 
 
-MixOp = Union[IntraMix, InterGossip]
-Op = Union[LocalSteps, IntraMix, InterGossip, Compress, Privatize,
-           MaskRenorm]
+MixOp = TierMix
+Op = Union[LocalSteps, TierMix, Compress, Privatize, MaskRenorm]
 
 
 # ---------------------------------------------------------------------------
@@ -186,8 +218,11 @@ class RoundProgram:
             if b.local.lr_scale <= 0.0:
                 raise ValueError(f"lr_scale must be > 0: {b.local}")
             for m in b.mixes:
-                if isinstance(m, InterGossip) and m.pi < 1:
-                    raise ValueError(f"InterGossip.pi must be >= 1: {m}")
+                if m.level < 0:
+                    raise ValueError(f"TierMix.level must be >= 0: {m}")
+                if m.level >= 1 and m.pi < 1:
+                    raise ValueError(
+                        f"gossip tiers' pi must be >= 1: {m}")
         if self.tau_dev is not None:
             td = np.asarray(self.tau_dev)
             if td.ndim != 1 or not np.issubdtype(td.dtype, np.integer):
@@ -228,13 +263,13 @@ def _parse_blocks(ops: Sequence[Op]) -> Tuple[Block, ...]:
             raise ValueError("Privatize must precede Compress (the upload "
                              "applies DP before compression)")
         mixes: List[MixOp] = []
-        while i < N and isinstance(ops[i], (IntraMix, InterGossip)):
+        while i < N and isinstance(ops[i], TierMix):
             mixes.append(ops[i])
             i += 1
         if not mixes:
             raise ValueError(
                 f"LocalSteps at op {i - 1} has no closing mixing boundary "
-                f"(IntraMix/InterGossip)")
+                f"(IntraMix/InterGossip/TierMix)")
         blocks.append(Block(local, privatize, compress, tuple(mixes)))
     return tuple(blocks)
 
@@ -249,18 +284,43 @@ def canonical_program(fl: FLConfig, *, privatize: bool = False,
     (τ local steps → [Privatize → Compress →] IntraMix), the last block
     also closed by ``InterGossip(fl.pi)`` — exactly the boundary
     placement of eq. 11, so lowering this program reproduces the
-    pre-IR engines' trajectories."""
+    pre-IR engines' trajectories. A depth-L ``fl.hierarchy`` appends one
+    ``TierMix(ℓ, fl.pi)`` per deeper tier to the final boundary
+    (:func:`hierarchical_program` with default repeats)."""
+    return hierarchical_program(fl, privatize=privatize, compress=compress)
+
+
+def hierarchical_program(fl: FLConfig, qs=None, pis=None, *,
+                         privatize: bool = False,
+                         compress: bool = False) -> RoundProgram:
+    """The canonical schedule generalized to a depth-L hierarchy.
+
+    The tier-ℓ superblock is ``qs[ℓ-1]`` repetitions of the tier-(ℓ-1)
+    superblock closed by ``TierMix(ℓ, pis[ℓ-1])``; tier 0's unit is the
+    usual (τ local steps → [upload →] IntraMix) block. Defaults:
+    ``qs = (fl.q, 1, 1, ...)`` and ``pis = (fl.pi,) * (L-1)``, so depth
+    2 reduces exactly to the pre-hierarchy canonical program."""
+    L = fl.depth
+    qs = ((fl.q,) + (1,) * (L - 2)) if qs is None else tuple(qs)
+    pis = ((fl.pi,) * (L - 1)) if pis is None else tuple(pis)
+    assert len(qs) == L - 1 and len(pis) == L - 1, (qs, pis, L)
     block: List[Op] = [LocalSteps(fl.tau)]
     if privatize:
         block.append(Privatize())
     if compress:
         block.append(Compress())
     block.append(IntraMix())
-    ops: List[Op] = [MaskRenorm()]
-    for _ in range(fl.q):
-        ops.extend(block)
-    ops.append(InterGossip(fl.pi))
-    return RoundProgram(tuple(ops))
+    unit: List[Op] = []
+    for _ in range(qs[0]):
+        unit.extend(block)
+    unit.append(InterGossip(pis[0]))
+    for lvl in range(2, L):
+        rep: List[Op] = []
+        for _ in range(qs[lvl - 1]):
+            rep.extend(unit)
+        rep.append(TierMix(lvl, pis[lvl - 1]))
+        unit = rep
+    return RoundProgram(tuple([MaskRenorm()] + unit))
 
 
 # ---------------------------------------------------------------------------
@@ -329,20 +389,30 @@ def block_runs(plans: Sequence[BlockPlan]
 
 
 def resolve_matrices(plans: Sequence[BlockPlan], W_intra: np.ndarray,
-                     inter_of_pi: Callable[[int], np.ndarray]
+                     inter_of_pi: Callable[[int], np.ndarray],
+                     tier_of: Optional[Callable[[TierMix], np.ndarray]] = None
                      ) -> Tuple[np.ndarray, ...]:
     """The concrete mixing matrices one round's lowered function
     consumes, in consumption order: one matrix per MixGroup per *run*
     (identical consecutive blocks share their groups' matrices). A fused
     group's ops compose right-to-left — ops applied o1 then o2 become
-    the single operator M2 @ M1."""
+    the single operator M2 @ M1. ``tier_of`` resolves mixes above the
+    backhaul (``TierMix(level >= 2)``); the base tiers keep their
+    dedicated resolvers so depth-2 callers need not pass it."""
     mats: List[np.ndarray] = []
     for bp, _count in block_runs(plans):
         for g in bp.groups:
             M = None
             for op in g.ops:
-                Mi = (W_intra if isinstance(op, IntraMix)
-                      else inter_of_pi(op.pi))
+                if op.level == 0:
+                    Mi = W_intra
+                elif op.level == 1:
+                    Mi = inter_of_pi(op.pi)
+                elif tier_of is None:
+                    raise ValueError(
+                        f"TierMix(level={op.level}) needs a tier_of resolver")
+                else:
+                    Mi = tier_of(op)
                 M = Mi if M is None else Mi @ M
             mats.append(np.asarray(M, np.float32))
     return tuple(mats)
@@ -367,7 +437,49 @@ class RoundArgs(NamedTuple):
 #: (mobility/sampling) for that round; returns the program to execute.
 ScheduleFn = Callable[[int, Optional[object]], RoundProgram]
 
-SCHEDULES = ("static", "adaptive_tau", "pi_decay")
+SCHEDULES = ("static", "adaptive_tau", "pi_decay", "adaptive_tau_online")
+
+
+class OnlineSpeedEstimator:
+    """EMA of realized per-device compute rates, fed by the EventClock.
+
+    ``observe`` takes the step counts and wall-clock compute times a
+    round actually charged and folds rate = steps/time into a per-device
+    EMA; devices outside the cohort keep their last estimate. The EMA is
+    kept in *raw* rate units (not per-round normalized) so observations
+    of different partial cohorts across rounds stay comparable —
+    :func:`adaptive_tau_map` only consumes the ratios exposed by
+    ``multipliers``."""
+
+    def __init__(self, n: int, beta: float = 0.5):
+        self.n = int(n)
+        self.beta = float(beta)
+        self._rate = np.full(self.n, np.nan)
+
+    def observe(self, steps: np.ndarray, times: np.ndarray,
+                mask: Optional[np.ndarray] = None) -> None:
+        steps = np.asarray(steps, float)
+        times = np.asarray(times, float)
+        sel = (steps > 0) & (times > 0)
+        if mask is not None:
+            sel &= np.asarray(mask) > 0
+        if not sel.any():
+            return
+        rate = steps[sel] / times[sel]
+        prev = self._rate[sel]
+        self._rate[sel] = np.where(
+            np.isnan(prev), rate, (1.0 - self.beta) * prev + self.beta * rate)
+
+    @property
+    def ready(self) -> bool:
+        return bool(np.isfinite(self._rate).any())
+
+    @property
+    def multipliers(self) -> np.ndarray:
+        r = self._rate
+        if not np.isfinite(r).any():
+            return np.ones(self.n)
+        return np.where(np.isfinite(r), r / np.nanmean(r), 1.0)
 
 
 def adaptive_tau_map(tau: int, labels: np.ndarray, mask: np.ndarray,
@@ -399,7 +511,8 @@ def make_schedule(name: str, fl: FLConfig, *, engine=None,
                   speeds: Optional[np.ndarray] = None,
                   privatize: bool = False, compress: bool = False,
                   tau_floor: int = 1, decay_round: int = 5,
-                  pi_late: Optional[int] = None) -> ScheduleFn:
+                  pi_late: Optional[int] = None,
+                  ema_beta: float = 0.5) -> ScheduleFn:
     """Build a named :data:`ScheduleFn`.
 
     - ``static``: the canonical program every round (the paper).
@@ -412,6 +525,13 @@ def make_schedule(name: str, fl: FLConfig, *, engine=None,
       while ``round_idx < decay_round`` (consensus matters early), then
       ``pi_late`` (default max(1, fl.pi // 5)) to shed backhaul time
       once the edge models agree.
+    - ``adaptive_tau_online``: adaptive τ_k, but driven by *online*
+      per-device rate estimates (an :class:`OnlineSpeedEstimator` EMA
+      fed by the EventClock's realized compute times) instead of oracle
+      scenario speeds. Round 0 runs the full τ; once observations
+      arrive the cutoffs converge to the oracle schedule's. The
+      estimator is exposed as ``schedule_fn.estimator`` so the wall
+      clock driver can feed it.
     """
     if name not in SCHEDULES:
         raise ValueError(
@@ -421,14 +541,7 @@ def make_schedule(name: str, fl: FLConfig, *, engine=None,
     if name == "static":
         return lambda r, plan: canonical
 
-    if name == "adaptive_tau":
-        mult = None
-        if speeds is not None:
-            mult = np.asarray(speeds, float)
-        elif engine is not None:
-            mult = np.asarray(engine.speed_multipliers, float)
-        if mult is None:
-            mult = np.ones(fl.n)
+    if name in ("adaptive_tau", "adaptive_tau_online"):
         template = RoundProgram(
             tuple(dataclasses.replace(o, adaptive=True)
                   if isinstance(o, LocalSteps) else o
@@ -436,13 +549,36 @@ def make_schedule(name: str, fl: FLConfig, *, engine=None,
             tau_dev=np.full(fl.n, fl.tau, np.int32))
         base_labels = np.repeat(np.arange(fl.num_clusters),
                                 fl.devices_per_cluster)
+        full_tau = np.full(fl.n, fl.tau, np.int32)
 
-        def adaptive(r, plan):
+        if name == "adaptive_tau":
+            mult = None
+            if speeds is not None:
+                mult = np.asarray(speeds, float)
+            elif engine is not None:
+                mult = np.asarray(engine.speed_multipliers, float)
+            if mult is None:
+                mult = np.ones(fl.n)
+
+            def adaptive(r, plan):
+                labels = plan.labels if plan is not None else base_labels
+                mask = plan.mask if plan is not None else np.ones(fl.n)
+                return template.bind(adaptive_tau_map(
+                    fl.tau, labels, mask, mult, fl.num_clusters, tau_floor))
+            return adaptive
+
+        est = OnlineSpeedEstimator(fl.n, ema_beta)
+
+        def online(r, plan):
+            if not est.ready:
+                return template.bind(full_tau)
             labels = plan.labels if plan is not None else base_labels
             mask = plan.mask if plan is not None else np.ones(fl.n)
             return template.bind(adaptive_tau_map(
-                fl.tau, labels, mask, mult, fl.num_clusters, tau_floor))
-        return adaptive
+                fl.tau, labels, mask, est.multipliers, fl.num_clusters,
+                tau_floor))
+        online.estimator = est
+        return online
 
     lo_pi = max(1, fl.pi // 5) if pi_late is None else pi_late
     late = RoundProgram(tuple(

@@ -13,7 +13,7 @@ Baselines (paper §6.1 adaptation):
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 MBPS = 1e6  # bits/s
 
@@ -27,6 +27,17 @@ class HardwareProfile:
     b_e2e: float = 50 * MBPS
     b_d2c: float = 1 * MBPS
     bytes_per_param: int = 4
+    # depth>2 hierarchies: bandwidth of tier ℓ's links for ℓ >= 2
+    # (b_tiers[0] = tier 2 / region, ...); empty falls back to b_e2e
+    b_tiers: Tuple[float, ...] = ()
+
+    def tier_bandwidth(self, level: int) -> float:
+        """Link bandwidth of a ``TierMix(level)`` exchange: the backhaul
+        ``b_e2e`` for tier 1 (and any tier without its own entry), the
+        per-tier override ``b_tiers[level-2]`` above it."""
+        if level <= 1 or level - 2 >= len(self.b_tiers):
+            return self.b_e2e
+        return self.b_tiers[level - 2]
 
     @staticmethod
     def tpu_v5e(chips_per_replica: int = 16) -> "HardwareProfile":

@@ -131,7 +131,10 @@ class ScenarioEngine:
         self.rng = np.random.default_rng(sc.seed)
         self.labels = np.repeat(np.arange(fl.num_clusters),
                                 fl.devices_per_cluster)
-        adj = topo.build_adjacency(fl.topology, fl.num_clusters, fl)
+        # tier-1 backhaul graph, block-diagonal under a depth>2 hierarchy
+        # (same construction as cefedavg.make_w_schedule)
+        hier = topo.Hierarchy.from_config(fl)
+        adj = hier.adjacency(1, fl.topology, fl)
         self.H = topo.mixing_matrix(adj, fl.mixing)
         self.speed_multipliers = sample_speed_multipliers(sc, fl.n, self.rng)
         self.round_index = 0

@@ -35,6 +35,8 @@ from repro.core import collectives as col
 from repro.core import gossip as gsp
 from repro.core import program as prg
 from repro.core.cefedavg import FLSimulator, make_w_schedule, mix
+from repro.core.groups import get_registry
+from repro.core.modelbank import ModelBank
 from repro.models import model as mdl
 from repro.optim import make_optimizer, make_lr_schedule
 from repro.optim.optimizers import apply_updates
@@ -124,11 +126,14 @@ class ShardedCEFedAvg:
         self.opt_init, self.opt_update = make_optimizer(exp.train)
         self.lr_fn = make_lr_schedule(exp.train)
         impl = exp.fl.gossip_impl
+        # communicator groups: built once per (fl, mesh) and queried for
+        # every tiered collective (means, gossip schedules)
+        self.registry = get_registry(self.fl, mesh)
         self.gossip_schedule: Optional[gsp.GossipSchedule] = None
         if impl in ("sparse", "ringweight") and \
                 self.fl.algorithm in ("ce_fedavg", "dec_local_sgd"):
-            self.gossip_schedule = gsp.GossipSchedule.build(
-                self.sched.H, self.fl.pi, self.geo.devices_per_cluster,
+            self.gossip_schedule = self.registry.gossip_schedule(
+                1, self.fl.pi,
                 mode="exact" if impl == "ringweight" else "rounds")
         self._build_specs()
 
@@ -172,16 +177,16 @@ class ShardedCEFedAvg:
         if self.fl.algorithm == "fedavg":
             return params  # cloud FedAvg: no intra-cluster boundary
         if self.exp.fl.gossip_impl in ("sparse", "ringweight"):
-            return sparse_intra_mix(params, self.param_specs, self.mesh,
-                                    self.geo)
+            return self.registry.mean(params, self.param_specs, 0)
         return mix(self.sched.W_intra, params)
 
     def _inter(self, params):
         if self.gossip_schedule is not None:
-            params = sparse_intra_mix(params, self.param_specs, self.mesh,
-                                      self.geo)
-            return gsp.apply_gossip(self.gossip_schedule, params,
-                                    self.param_specs, self.mesh)
+            params = self.registry.mean(params, self.param_specs, 0)
+            impl = self.exp.fl.gossip_impl
+            return self.registry.gossip(
+                params, self.param_specs, 1, self.fl.pi,
+                mode="exact" if impl == "ringweight" else "rounds")
         return mix(self.sched.W_inter, params)
 
     # -- the steps -----------------------------------------------------------
@@ -326,14 +331,20 @@ class ShardedBankCEFedAvg(FLSimulator):
     row, so trajectories agree to float tolerance (asserted in
     ``tests/test_sharded_bank.py``).
 
+    Tiered collectives come from the :class:`repro.core.groups.
+    GroupRegistry` built once for ``(fl, mesh)``: any ``TierMix(ℓ)`` —
+    ``IntraMix`` (tier 0), ``InterGossip`` (tier 1), or deeper tiers of
+    an ``fl.hierarchy`` like (2, 2, 2) — lowers to that tier's grouped
+    psum plus its cached block-diagonal gossip matchings, so a depth-3
+    round still contains no all-gather.
+
     Constraints: ``fl.n`` must equal the replica-axis device count (one
     row per device), and any ``model`` mesh axis must have size 1 (bank
     rows are not tensor-parallel). The never-materialize guarantee
-    covers the steady-state *round*; construction currently builds the
-    bank and dataset on the default device once, then re-places them
-    (``ModelBank.place``) — per-shard in-place init (e.g.
-    ``jax.make_array_from_callback``) is what a multi-host pod would
-    need and is left for that milestone.
+    covers init as well as the steady-state round: the bank is built
+    per-shard via ``ModelBank.from_model_sharded``
+    (``jax.make_array_from_callback``), each device filling only its own
+    ``(1, T)`` rows — the multi-host-correct path.
     """
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl, data,
@@ -352,6 +363,7 @@ class ShardedBankCEFedAvg(FLSimulator):
                 "bank rows are not tensor-parallel (model axis must be 1)"
         self._rspec = raxes if len(raxes) > 1 else raxes[0]
         self._row_sharding = NamedSharding(mesh, P(self._rspec, None))
+        self.registry = get_registry(fl, mesh)
         placed = {}
         for key, v in data.items():
             spec = P(self._rspec) if key in ("xs", "ys") else P()
@@ -361,7 +373,13 @@ class ShardedBankCEFedAvg(FLSimulator):
         # rows are pinned to devices: no cohort compaction; scenario
         # rounds run mask-frozen on the full (sharded) bank instead
         self._compact_enabled = False
-        self.bank.place(self._row_sharding)
+
+    def _make_bank(self, one, n: int, with_residual: bool) -> ModelBank:
+        """Per-shard init: each device fills its own bank rows directly
+        (``jax.make_array_from_callback``); the full (n, T) bank never
+        exists on one device, init included."""
+        return ModelBank.from_model_sharded(
+            one, n, self._row_sharding, with_residual=with_residual)
 
     # -- the sharded round ---------------------------------------------------
     def _lower_compact(self, program):
@@ -380,15 +398,16 @@ class ShardedBankCEFedAvg(FLSimulator):
         - ``LocalSteps`` → q·τ local SGD steps on the local row (the
           single-device key/batch schedule, with per-device ``tau_dev``
           cutoffs for adaptive programs);
-        - ``IntraMix`` → grouped ``psum`` over the cluster's rows
-          (structured path) or the dense masked operator via weighted
-          rotations (scenario/non-gossip rounds);
-        - ``InterGossip(π)`` → cluster mean + π gossip rounds of that
-          depth's edge-colored ``ppermute`` matchings (one
-          ``GossipSchedule`` per distinct π in the program), or dense
-          rotations on the scenario path. Consecutive cluster means
-          dedupe (V is idempotent), which is exactly how the fused
-          τ∘qτ boundary stays a single psum + gossip pass.
+        - ``TierMix(ℓ, π)`` (``IntraMix`` = tier 0, ``InterGossip`` =
+          tier 1) → the registry tier's grouped ``psum`` plus, for
+          ℓ >= 1, π gossip rounds of that tier's edge-colored
+          ``ppermute`` matchings (one cached ``GossipSchedule`` per
+          distinct (ℓ, π) in the program), or dense masked operators
+          via weighted rotations on the scenario/non-gossip path.
+          Means dedupe through the ``usize`` uniformity tracker (a row
+          already uniform over a tier-ℓ' ⊇ tier-ℓ group needs no new
+          psum), which is exactly how the fused τ∘qτ boundary stays a
+          single psum + gossip pass at any depth.
 
         Buffers are donated: peak per-device memory stays ~1× the
         (1, T) bank shard per resident buffer."""
@@ -401,8 +420,6 @@ class ShardedBankCEFedAvg(FLSimulator):
         N = xs.shape[1]
         layout = self.bank.layout
         batch, momentum, lr0 = self.batch, self.momentum, self.lr
-        dpc = fl.devices_per_cluster
-        m = fl.num_clusters
         segments = layout.segments
         plans = prg.lowering_plan(program, fuse=True)
         runs = prg.block_runs(plans)
@@ -412,19 +429,24 @@ class ShardedBankCEFedAvg(FLSimulator):
         for bp, _cnt in runs:
             goffs.append(nmats)
             nmats += len(bp.groups)
-        # static ce_fedavg schedule -> structured collectives (psum +
-        # gossip matchings); anything time-varying or non-gossip -> exact
-        # dense operators via weighted rotations
+        # static ce_fedavg schedule -> structured collectives (registry
+        # tier psums + gossip matchings); anything time-varying or
+        # non-gossip -> exact dense operators via weighted rotations
         structured = self.engine is None and fl.algorithm == "ce_fedavg"
+        registry = self.registry
+        gsize = tuple(registry.tier(lvl).group_size
+                      for lvl in range(registry.depth))
         gscheds = {}
-        if structured and m > 1:
+        if structured:
             for bp in plans:
                 for g in bp.groups:
                     for op in g.ops:
-                        if (isinstance(op, prg.InterGossip)
-                                and op.pi not in gscheds):
-                            gscheds[op.pi] = gsp.GossipSchedule.build(
-                                self.sched.H, op.pi, dpc)
+                        key_lp = (op.level, op.pi)
+                        if (op.level >= 1 and key_lp not in gscheds
+                                and registry.hier.num_siblings(
+                                    op.level) > 1):
+                            gscheds[key_lp] = registry.gossip_schedule(
+                                op.level, op.pi)
 
         def loss_row(row, x, y):
             return self._loss(layout.unflatten_one(row), x, y)
@@ -489,31 +511,38 @@ class ShardedBankCEFedAvg(FLSimulator):
                                                  keys[my], segments)
                 return d_row, r_row
 
-            def apply_group(Y, g, Wg, uniform):
-                """Lower one MixGroup. ``uniform`` tracks whether rows
-                are already cluster-uniform, so consecutive cluster
-                means (V idempotent, and W_inter's leading B^T…B)
-                dedupe into one psum — the fused τ∘qτ boundary."""
+            def apply_group(Y, g, Wg, usize):
+                """Lower one MixGroup. ``usize`` tracks the tier group
+                size at which rows are already uniform (1 = not), so
+                consecutive tier means dedupe into one psum (V
+                idempotent, W_inter's leading B^T…B, and — contiguous
+                nesting — any coarser tier implying the finer ones):
+                the fused τ∘qτ boundary at any depth. Gossip at tier ℓ
+                keeps rows node-uniform at ℓ but breaks coarser
+                uniformity, so it resets ``usize`` to its tier's
+                size."""
                 if not structured:
-                    return gsp.dense_mix_rows(Wg, Y, mesh), False
+                    return gsp.dense_mix_rows(Wg, Y, mesh), 1
                 for op in g.ops:
-                    if not uniform:
-                        Y = gsp.cluster_mean_in_body(mesh, Y, m, dpc)
-                        uniform = True
-                    if isinstance(op, prg.InterGossip):
-                        gs = gscheds.get(op.pi)
+                    s = gsize[op.level]
+                    if usize < s:
+                        Y = registry.mean_in_body(Y, op.level)
+                        usize = s
+                    if op.level >= 1:
+                        gs = gscheds.get((op.level, op.pi))
                         if gs is not None:
                             Y = gsp.gossip_in_body(gs, mesh, Y)
-                return Y, uniform
+                            usize = s
+                return Y, usize
 
             def run_block(bp, goff, Y, M, Rres, k1):
                 op = bp.local
                 if not bp.upload:
                     Y, M = train_block(Y, M, k1, op)
-                    uniform = False
+                    usize = 1
                     for j, g in enumerate(bp.groups):
-                        Y, uniform = apply_group(Y, g, mats[goff + j],
-                                                 uniform)
+                        Y, usize = apply_group(Y, g, mats[goff + j],
+                                               usize)
                     return Y, M, Rres
                 Y0 = Y
                 Y, M = train_block(Y, M, k1, op)
@@ -522,12 +551,12 @@ class ShardedBankCEFedAvg(FLSimulator):
                     jax.random.fold_in(k1, 7), bp)
                 Rres = Rres if r_row is None else r_row[None]
                 d, _ = apply_group(d_row[None], bp.groups[0], mats[goff],
-                                   False)
+                                   1)
                 Y = Y0 + d
-                uniform = False
+                usize = 1
                 for j in range(1, len(bp.groups)):
-                    Y, uniform = apply_group(Y, bp.groups[j],
-                                             mats[goff + j], uniform)
+                    Y, usize = apply_group(Y, bp.groups[j],
+                                           mats[goff + j], usize)
                 return Y, M, Rres
 
             keys = jax.random.split(key, nblocks)

@@ -7,7 +7,8 @@ undirected graph.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -189,6 +190,136 @@ def inter_cluster_operator(cluster_sizes, H: np.ndarray,
     c = 1.0 / np.asarray(cluster_sizes, float)
     Hp = np.linalg.matrix_power(H, pi)
     return B.T @ np.diag(c) @ Hp @ B
+
+
+# ---------------------------------------------------------------------------
+# depth>2 hierarchies: tiered groups and per-tier mixing operators
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """A depth-L aggregation hierarchy as branching factors root→leaf.
+
+    ``levels = (l_0, ..., l_{L-1})`` reads "l_0 regions × l_1 edges per
+    region × ... × l_{L-1} devices per edge"; the paper's two-tier setup
+    is ``(m, devices_per_cluster)``. A ``TierMix(ℓ)`` op averages each
+    device group at tier ℓ and (for ℓ >= 1) gossips among sibling groups
+    under their common parent, so its mixing matrix is block-diagonal —
+    one backhaul graph per parent (``kron(I, H_block)``) — and tier 1 at
+    depth 2 reduces exactly to the paper's edge backhaul ``InterGossip``.
+
+    >>> h = Hierarchy((2, 2, 2))
+    >>> [(lvl, h.tier_name(lvl), h.num_groups(lvl), h.group_size(lvl))
+    ...  for lvl in range(h.depth)]
+    [(0, 'device', 4, 2), (1, 'edge', 4, 2), (2, 'region', 2, 4)]
+    """
+    levels: Tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "levels", tuple(self.levels))
+        assert len(self.levels) >= 2 and all(s >= 1 for s in self.levels), \
+            f"hierarchy needs >= 2 tiers of size >= 1: {self.levels}"
+
+    @staticmethod
+    def from_config(fl) -> "Hierarchy":
+        """The hierarchy of an :class:`repro.config.FLConfig` (its
+        ``tiers`` property — depth 2 unless ``fl.hierarchy`` is set)."""
+        return Hierarchy(tuple(fl.tiers))
+
+    @property
+    def depth(self) -> int:
+        """Number of tiers L; valid TierMix levels are 0..L-1."""
+        return len(self.levels)
+
+    @property
+    def n(self) -> int:
+        """Total leaf devices."""
+        return int(np.prod(self.levels))
+
+    @property
+    def num_edges(self) -> int:
+        """Leaf clusters (the paper's m) = prod(levels[:-1])."""
+        return int(np.prod(self.levels[:-1]))
+
+    def num_nodes(self, level: int) -> int:
+        """Aggregation nodes at tier ``level`` >= 1 (edges at 1, the
+        ``levels[0]`` top nodes at L-1)."""
+        assert 1 <= level < self.depth, (level, self.depth)
+        return int(np.prod(self.levels[:self.depth - level]))
+
+    def node_size(self, level: int) -> int:
+        """Leaf devices under one tier-``level`` node."""
+        return self.n // self.num_nodes(level)
+
+    def num_siblings(self, level: int) -> int:
+        """Gossip-graph size at tier ``level``: children of one parent
+        (all ``levels[0]`` top nodes at the topmost tier)."""
+        assert 1 <= level < self.depth, (level, self.depth)
+        return self.levels[self.depth - 1 - level]
+
+    def num_parents(self, level: int) -> int:
+        """Independent gossip graphs (diagonal blocks of H_ℓ)."""
+        return self.num_nodes(level) // self.num_siblings(level)
+
+    # -- the partition a TierMix(level) averages over ------------------------
+    def num_groups(self, level: int) -> int:
+        """Device groups averaged by ``TierMix(level)``: tier 0 averages
+        per edge (same partition as tier 1's pre-gossip mean)."""
+        return self.num_nodes(max(level, 1))
+
+    def group_size(self, level: int) -> int:
+        """Devices per ``TierMix(level)`` group."""
+        return self.n // self.num_groups(level)
+
+    def tier_name(self, level: int) -> str:
+        """Registry name of the tier: device / edge / region / tier<ℓ>."""
+        return ("device", "edge", "region")[level] if level <= 2 \
+            else f"tier{level}"
+
+    def node_of_edge(self, level: int) -> np.ndarray:
+        """(num_edges,) static map edge id → tier-``level`` node id
+        (contiguous nesting); composes with mobility's device→edge
+        labels to give device→node labels at any tier."""
+        return np.arange(self.num_edges) // (
+            self.num_edges // self.num_nodes(level))
+
+    def node_labels(self, level: int, labels) -> np.ndarray:
+        """(n,) device → tier-``level`` node id under device→edge
+        assignment ``labels``."""
+        return self.node_of_edge(level)[np.asarray(labels, int)]
+
+    # -- per-tier mixing -----------------------------------------------------
+    def adjacency(self, level: int, topology: str = "ring",
+                  cfg=None) -> np.ndarray:
+        """Block-diagonal backhaul adjacency of tier ``level``: one
+        ``topology`` graph over each parent's ``num_siblings`` children
+        (a single graph over all nodes at depth 2 / the top tier)."""
+        blk = build_adjacency(topology, self.num_siblings(level), cfg)
+        reps = self.num_parents(level)
+        return np.kron(np.eye(reps, dtype=bool), blk).astype(bool)
+
+    def mixing(self, level: int, topology: str = "ring",
+               kind: str = "metropolis", cfg=None) -> np.ndarray:
+        """H_ℓ: Metropolis weights of the (block-diagonal) tier graph.
+        Block-diagonal adjacency gives kron(I, H_block) exactly, since
+        Metropolis weights depend only on within-block degrees."""
+        if self.num_siblings(level) == 1:
+            return np.eye(self.num_nodes(level))
+        return mixing_matrix(self.adjacency(level, topology, cfg), kind)
+
+    def tier_operator(self, level: int, pi: int = 1,
+                      topology: str = "ring", kind: str = "metropolis",
+                      cfg=None) -> np.ndarray:
+        """Dense (n, n) operator of ``TierMix(level, pi)`` under the
+        static contiguous assignment: tier 0 is the intra-cluster V,
+        tier ℓ >= 1 is B_ℓ^T diag(c) H_ℓ^π B_ℓ (eq. 11 generalized to
+        the tier's node partition)."""
+        if level == 0:
+            return intra_cluster_operator(
+                [self.levels[-1]] * self.num_edges)
+        sizes = [self.node_size(level)] * self.num_nodes(level)
+        return inter_cluster_operator(
+            sizes, self.mixing(level, topology, kind, cfg), pi)
 
 
 # ---------------------------------------------------------------------------

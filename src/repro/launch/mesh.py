@@ -54,6 +54,16 @@ def make_replica_mesh(num_replicas: int, *, pods: int = 1) -> Mesh:
     return Mesh(dev, axes)
 
 
+def make_tier_mesh(hierarchy, *, pods: int = 1) -> Mesh:
+    """Mesh for a depth-L hierarchy preset (branching factors root→leaf,
+    e.g. ``(2, 2, 2)`` = 2 regions × 2 edges × 2 devices): one bank row
+    per leaf device. The tier structure lives in ``FLConfig.hierarchy``
+    / the GroupRegistry, not in extra mesh axes — the flat replica
+    numbering is what the contiguous tier groups index."""
+    n = int(np.prod(tuple(hierarchy)))
+    return make_replica_mesh(n, pods=pods)
+
+
 def initialize_multihost(coordinator_address: str | None = None,
                          num_processes: int | None = None,
                          process_id: int | None = None) -> None:

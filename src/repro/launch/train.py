@@ -72,10 +72,32 @@ def main(argv=None):
                     help="named wall-clock scenario (bank engine): device "
                          "heterogeneity / client sampling / mobility — "
                          "adaptive_tau needs a heterogeneous one to bite")
+    ap.add_argument("--hierarchy", default="",
+                    help="depth>2 tier preset (bank engine): comma-"
+                         "separated branching factors root->leaf, e.g. "
+                         "'2,2,2' = 2 regions x 2 edges x 2 devices; "
+                         "overrides --clusters/--data-parallel geometry")
+    ap.add_argument("--multihost", action="store_true",
+                    help="call jax.distributed.initialize before any "
+                         "device use (real-cluster entry point; "
+                         "auto-detects on Cloud TPU, or pass the "
+                         "--coordinator/--num-processes/--process-id "
+                         "trio / JAX_* env vars)")
+    ap.add_argument("--coordinator", default="",
+                    help="coordinator address host:port for --multihost")
+    ap.add_argument("--num-processes", type=int, default=0)
+    ap.add_argument("--process-id", type=int, default=-1)
     args = ap.parse_args(argv)
     if args.engine != "bank" and (args.schedule != "static"
-                                  or args.scenario):
-        ap.error("--schedule/--scenario require --engine bank")
+                                  or args.scenario or args.hierarchy):
+        ap.error("--schedule/--scenario/--hierarchy require --engine bank")
+
+    if args.multihost:
+        from repro.launch.mesh import initialize_multihost
+        initialize_multihost(
+            coordinator_address=args.coordinator or None,
+            num_processes=args.num_processes or None,
+            process_id=args.process_id if args.process_id >= 0 else None)
 
     if args.engine == "bank":
         return run_bank_engine(args)
@@ -155,12 +177,22 @@ def run_bank_engine(args):
               "the pytree engine; the bank engine always lowers its "
               "boundaries to psum + ppermute matchings (static schedule) "
               "or weighted rotations (scenario rounds)")
-    m = args.clusters or max(1, n // 2)
-    assert n % m == 0, f"{n} devices not divisible into {m} clusters"
-    fl = FLConfig(algorithm=args.algorithm, num_clusters=m,
-                  devices_per_cluster=n // m, tau=args.tau, q=args.q,
-                  pi=args.pi, topology=args.topology,
-                  er_prob=args.er_prob)
+    if args.hierarchy:
+        # depth>2 preset: geometry comes from the branching factors
+        tiers = tuple(int(s) for s in args.hierarchy.split(","))
+        n = int(np.prod(tiers))
+        m = int(np.prod(tiers[:-1]))
+        fl = FLConfig(algorithm=args.algorithm, num_clusters=m,
+                      devices_per_cluster=tiers[-1], tau=args.tau,
+                      q=args.q, pi=args.pi, topology=args.topology,
+                      er_prob=args.er_prob, hierarchy=tiers)
+    else:
+        m = args.clusters or max(1, n // 2)
+        assert n % m == 0, f"{n} devices not divisible into {m} clusters"
+        fl = FLConfig(algorithm=args.algorithm, num_clusters=m,
+                      devices_per_cluster=n // m, tau=args.tau, q=args.q,
+                      pi=args.pi, topology=args.topology,
+                      er_prob=args.er_prob)
     mesh = make_replica_mesh(n)
     x, y = make_synthetic_classification(1600, 16, 8, seed=0, noise=2.5)
     tx, ty = make_synthetic_classification(400, 16, 8, seed=1, noise=2.5)

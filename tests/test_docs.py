@@ -15,7 +15,7 @@ DOC_MODULES = ("repro.core.cefedavg", "repro.core.gossip",
                "repro.core.topology", "repro.core.scenario",
                "repro.core.clock", "repro.core.runtime",
                "repro.core.modelbank", "repro.core.program",
-               "repro.kernels.gossip_mix")
+               "repro.core.groups", "repro.kernels.gossip_mix")
 
 
 @pytest.mark.parametrize("modname", DOC_MODULES)

@@ -1,0 +1,458 @@
+"""Communicator-group registry (ISSUE 6): tiered collectives + TierMix.
+
+Single-device coverage: the :class:`repro.core.topology.Hierarchy` math
+(tier partitions, block-diagonal mixing, dense TierMix operators, exact
+depth-2 reduction to the paper's two-tier schedule), the ``TierMix`` IR
+op and its IntraMix/InterGossip sugar, depth-3 dense-engine parity
+(legacy pytree vs flat ModelBank), per-tier clock pricing, the online
+adaptive-τ schedule's estimator loop, and the ``--multihost`` env-var
+plumbing. The ``multidevice``-marked tests exercise the
+:class:`repro.core.groups.GroupRegistry` proper — member lists, cached
+gossip schedules, mean/gossip collectives — on 8 forced host devices
+(the CI multidevice lane).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, ScenarioConfig
+from repro.core import program as prg
+from repro.core import topology as topo
+from repro.core.cefedavg import FLSimulator, make_w_schedule
+
+NDEV = 8
+
+_FL3 = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                devices_per_cluster=2, tau=2, q=2, pi=2, topology="ring",
+                hierarchy=(2, 2, 2))
+_FL2 = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                devices_per_cluster=2, tau=2, q=2, pi=4, topology="ring")
+
+multidevice = pytest.mark.multidevice
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < NDEV,
+    reason=f"needs {NDEV} devices; run under XLA_FLAGS="
+           f"--xla_force_host_platform_device_count={NDEV}")
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy math (host-side numpy; tier-1)
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_tier_table():
+    h = topo.Hierarchy((2, 2, 2))
+    assert h.depth == 3 and h.n == 8 and h.num_edges == 4
+    table = [(lv, h.tier_name(lv), h.num_groups(lv), h.group_size(lv))
+             for lv in range(h.depth)]
+    assert table == [(0, "device", 4, 2), (1, "edge", 4, 2),
+                     (2, "region", 2, 4)]
+    # tier 1 gossips pairs of edges under each region; tier 2 the regions
+    assert h.num_siblings(1) == 2 and h.num_parents(1) == 2
+    assert h.num_siblings(2) == 2 and h.num_parents(2) == 1
+    assert list(h.node_of_edge(2)) == [0, 0, 1, 1]
+
+
+def test_hierarchy_blockdiag_mixing():
+    """H_1 at depth 3 is kron(I_parents, H_block): gossip never crosses
+    a parent boundary."""
+    h = topo.Hierarchy((2, 2, 2))
+    H1 = h.mixing(1, "ring")
+    blk = topo.mixing_matrix(topo.build_adjacency("ring", 2), "metropolis")
+    assert np.allclose(H1, np.kron(np.eye(2), blk))
+    # off-diagonal parent blocks are exactly zero
+    assert np.allclose(H1[:2, 2:], 0) and np.allclose(H1[2:, :2], 0)
+
+
+def test_hierarchy_depth2_reduces_to_schedule():
+    """Depth 2 (the paper) reproduces make_w_schedule's H, W_intra and
+    W_inter exactly — the hierarchy generalizes, never changes, the
+    two-tier path."""
+    h = topo.Hierarchy.from_config(_FL2)
+    sched = make_w_schedule(_FL2)
+    assert np.allclose(h.mixing(1, _FL2.topology, _FL2.mixing, _FL2),
+                       sched.H)
+    assert np.allclose(h.tier_operator(0), sched.W_intra)
+    assert np.allclose(
+        h.tier_operator(1, _FL2.pi, _FL2.topology, _FL2.mixing, _FL2),
+        sched.W_inter)
+
+
+def test_tier_operators_are_stochastic():
+    h = topo.Hierarchy((2, 2, 2))
+    for lv, pi in [(0, 1), (1, 3), (2, 2)]:
+        W = h.tier_operator(lv, pi)
+        assert W.shape == (8, 8)
+        assert np.allclose(W.sum(1), 1.0)
+        assert (W >= -1e-12).all()
+
+
+def test_config_hierarchy_validation():
+    with pytest.raises(AssertionError):
+        FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                 devices_per_cluster=2, hierarchy=(2, 3, 2)).validate()
+    with pytest.raises(AssertionError, match="ce_fedavg only"):
+        FLConfig(algorithm="hier_favg", num_clusters=4,
+                 devices_per_cluster=2, hierarchy=(2, 2, 2)).validate()
+    assert _FL3.tiers == (2, 2, 2) and _FL3.depth == 3
+    assert _FL2.tiers == (4, 2) and _FL2.depth == 2
+
+
+# ---------------------------------------------------------------------------
+# TierMix IR op + sugar (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_tiermix_sugar_value_semantics():
+    """IntraMix/InterGossip are TierMix(0)/TierMix(1) sugar: equal by
+    value, interchangeable as dict keys, isinstance-compatible."""
+    assert prg.IntraMix() == prg.TierMix(0, 1)
+    assert prg.InterGossip(4) == prg.TierMix(1, 4)
+    assert prg.InterGossip(4) != prg.TierMix(1, 3)
+    assert hash(prg.IntraMix()) == hash(prg.TierMix(0, 1))
+    assert isinstance(prg.InterGossip(2), prg.TierMix)
+    assert isinstance(prg.IntraMix(), prg.TierMix)
+    assert "InterGossip" in repr(prg.InterGossip(2))
+
+
+def test_tiermix_validation():
+    with pytest.raises(ValueError, match="level must be >= 0"):
+        prg.RoundProgram((prg.MaskRenorm(), prg.LocalSteps(1),
+                          prg.TierMix(-1, 1))).validate()
+    with pytest.raises(ValueError, match="pi must be"):
+        prg.RoundProgram((prg.MaskRenorm(), prg.LocalSteps(1),
+                          prg.TierMix(2, 0))).validate()
+
+
+def test_hierarchical_program_shapes():
+    """Depth 2 delegation is exactly the old canonical program; depth 3
+    appends one TierMix per deeper tier at the outermost boundary."""
+    p2 = prg.canonical_program(_FL2)
+    assert p2.ops[-1] == prg.InterGossip(_FL2.pi)
+    assert sum(isinstance(o, prg.TierMix) and o.level == 0
+               for o in p2.ops) == _FL2.q
+    p3 = prg.canonical_program(_FL3)
+    assert p3.ops[-1] == prg.TierMix(2, _FL3.pi)
+    assert p3.ops[-2] == prg.InterGossip(_FL3.pi)
+    custom = prg.hierarchical_program(_FL3, qs=(2, 3), pis=(4, 1))
+    levels = [o.level for o in custom.ops if isinstance(o, prg.TierMix)]
+    assert levels.count(1) == 3 and levels.count(2) == 1
+    custom.validate()
+
+
+def test_resolve_matrices_tier_dispatch():
+    """Level>=2 mixes route through tier_of; omitting it raises."""
+    prog = prg.canonical_program(_FL3)
+    plans = prg.lowering_plan(prog, fuse=True)
+    sched = make_w_schedule(_FL3)
+    h = topo.Hierarchy.from_config(_FL3)
+    W2 = h.tier_operator(2, _FL3.pi, _FL3.topology, _FL3.mixing, _FL3)
+    mats = prg.resolve_matrices(
+        plans, sched.W_intra, lambda pi: sched.W_inter,
+        tier_of=lambda op: W2)
+    # last group fuses V, W_inter and the region mix right-to-left
+    assert np.allclose(mats[-1], W2 @ sched.W_inter @ sched.W_intra,
+                       atol=1e-6)
+    with pytest.raises(ValueError, match="tier_of"):
+        prg.resolve_matrices(plans, sched.W_intra,
+                             lambda pi: sched.W_inter)
+
+
+# ---------------------------------------------------------------------------
+# depth-3 dense engines: legacy pytree vs flat ModelBank (tier-1)
+# ---------------------------------------------------------------------------
+
+def _sim_pair(fl, **kw):
+    from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                      make_synthetic_classification)
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+    x, y = make_synthetic_classification(800, 16, 4, seed=3, noise=2.5)
+    tx, ty = make_synthetic_classification(200, 16, 4, seed=4, noise=2.5)
+    parts = dirichlet_partition(y, fl.n, alpha=0.3, seed=3)
+    data = {k: jnp.asarray(v) for k, v in build_fl_data(
+        x, y, parts, tx, ty, samples_per_device=64).items()}
+    init = lambda k: init_mlp_classifier(k, 16, 32, 4)   # noqa: E731
+    kw.setdefault("lr", 0.1)
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("seed", 0)
+    flat = FLSimulator(init, apply_mlp_classifier, fl, data, bank=True,
+                       **kw)
+    leg = FLSimulator(init, apply_mlp_classifier, fl, data, bank=False,
+                      **kw)
+    return flat, leg
+
+
+def _tree_maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                     - jnp.asarray(y, jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_depth3_dense_engine_parity():
+    """A depth-3 TierMix round (device→edge→region) runs identically on
+    the legacy pytree and flat ModelBank lowerings."""
+    flat, leg = _sim_pair(_FL3)
+    assert flat.last_program is None
+    for _ in range(2):
+        flat.step_round()
+        leg.step_round()
+    assert isinstance(flat.last_program.ops[-1], prg.TierMix)
+    assert flat.last_program.ops[-1].level == 2
+    assert _tree_maxdiff(flat.params, leg.params) < 2e-4
+
+
+def test_depth3_scenario_parity():
+    """Masked depth-3 operators (mobility re-labels devices; tier-2 node
+    labels lift through node_of_edge) stay in parity across engines."""
+    sc = ScenarioConfig(name="t", speed_dist="lognormal",
+                        speed_spread=0.6, sample_fraction=0.75,
+                        move_prob=0.3, seed=7)
+    flat, leg = _sim_pair(_FL3, scenario=sc)
+    for _ in range(3):
+        p1 = flat.step_round()
+        p2 = leg.step_round()
+        assert np.array_equal(p1.mask, p2.mask)
+        assert np.array_equal(p1.labels, p2.labels)
+    assert _tree_maxdiff(flat.params, leg.params) < 2e-4
+
+
+def test_tier_operator_level_guard():
+    flat, _ = _sim_pair(_FL2)
+    with pytest.raises(ValueError, match="depth"):
+        flat._tier_operator(prg.TierMix(2, 1), None, True)
+
+
+# ---------------------------------------------------------------------------
+# per-tier clock pricing (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_tier_bandwidth_pricing():
+    from repro.core import clock
+    from repro.core.runtime import (HardwareProfile, RuntimeModel,
+                                    WorkloadProfile)
+    hw = HardwareProfile(b_tiers=(5e6,))
+    rt = RuntimeModel(hw, WorkloadProfile(1000, 1e6))
+    assert hw.tier_bandwidth(1) == hw.b_e2e
+    assert hw.tier_bandwidth(2) == 5e6
+    assert hw.tier_bandwidth(3) == hw.b_e2e   # no entry -> backhaul
+    W = rt.wl.model_bits(hw)
+    prog = prg.canonical_program(_FL3)
+    t = clock.program_comm_time(rt, "ce_fedavg", prog)
+    expect = (_FL3.q * W / hw.b_d2e + _FL3.pi * W / hw.b_e2e
+              + _FL3.pi * W / 5e6)
+    assert t == pytest.approx(expect)
+    # depth 2 still reduces to the closed-form eq. (8) comm term
+    t2 = clock.program_comm_time(rt, "ce_fedavg",
+                                 prg.canonical_program(_FL2))
+    assert t2 == pytest.approx(rt.comm_time("ce_fedavg", _FL2.q, _FL2.pi))
+
+
+# ---------------------------------------------------------------------------
+# online adaptive-τ schedule (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_online_estimator_converges_to_oracle():
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=2,
+                  devices_per_cluster=2, tau=4, q=2, pi=2)
+    oracle = np.array([1.0, 1.0, 0.25, 0.25])
+    sched = prg.make_schedule("adaptive_tau_online", fl)
+    # round 0: nothing observed yet -> full tau everywhere
+    assert np.array_equal(sched(0, None).tau_dev, np.full(4, fl.tau))
+    steps = np.full(4, fl.q * fl.tau)
+    times = steps / oracle
+    for _ in range(5):
+        sched.estimator.observe(steps, times)
+    assert np.allclose(
+        sched.estimator.multipliers, oracle / oracle.mean(), atol=1e-6)
+    want = prg.make_schedule("adaptive_tau", fl, speeds=oracle)(1, None)
+    assert np.array_equal(sched(1, None).tau_dev, want.tau_dev)
+
+
+def test_online_estimator_partial_cohorts():
+    """Masked devices keep their last estimate; raw-rate EMA keeps
+    cross-round partial observations comparable."""
+    est = prg.OnlineSpeedEstimator(4, beta=0.5)
+    est.observe(np.array([4, 4, 0, 0]), np.array([1.0, 2.0, 0, 0]),
+                mask=np.array([1, 1, 0, 0]))
+    m1 = est.multipliers.copy()
+    assert m1[2] == 1.0 and m1[3] == 1.0       # unseen -> neutral
+    est.observe(np.array([0, 0, 4, 4]), np.array([0, 0, 1.0, 4.0]),
+                mask=np.array([0, 0, 1, 1]))
+    m2 = est.multipliers
+    # device 0 is 2x device 1 and 4x device 3, straight from raw rates
+    assert m2[0] == pytest.approx(2 * m2[1])
+    assert m2[0] == pytest.approx(4 * m2[3])
+
+
+def test_online_schedule_wall_clock_loop():
+    """run_wall_clock feeds realized compute times back into the online
+    schedule: after one round the estimator is live and slow clusters
+    get shorter τ_k, tracking the oracle adaptive_tau schedule."""
+    from repro.core.clock import run_wall_clock
+    from repro.core.runtime import compute_bound_runtime_model
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=2,
+                  devices_per_cluster=2, tau=4, q=2, pi=2)
+    sc = ScenarioConfig(name="t", speed_dist="lognormal",
+                        speed_spread=0.8, seed=11)
+    flat, _ = _sim_pair(fl, scenario=sc, schedule="adaptive_tau_online")
+    est = flat._schedule_fn.estimator
+    assert not est.ready
+    rt = compute_bound_runtime_model()
+    run_wall_clock(flat, rt, 3, eval_every=3, eval_batch=64)
+    assert est.ready
+    oracle = np.asarray(flat.engine.speed_multipliers, float)
+    assert np.allclose(est.multipliers, oracle / oracle.mean(), atol=1e-6)
+    want = prg.adaptive_tau_map(fl.tau, flat.labels, np.ones(fl.n),
+                                oracle, fl.num_clusters)
+    assert np.array_equal(flat.last_program.tau_dev, want)
+
+
+# ---------------------------------------------------------------------------
+# --multihost env-var plumbing (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_initialize_multihost_env_plumbing(monkeypatch):
+    from repro.launch import mesh as lm
+    calls = []
+    monkeypatch.setattr(jax.distributed, "initialize",
+                        lambda **kw: calls.append(kw))
+    monkeypatch.setenv("JAX_COORDINATOR_ADDRESS", "10.0.0.1:1234")
+    monkeypatch.setenv("JAX_NUM_PROCESSES", "4")
+    monkeypatch.setenv("JAX_PROCESS_ID", "2")
+    lm.initialize_multihost()
+    assert calls == [{"coordinator_address": "10.0.0.1:1234",
+                      "num_processes": 4, "process_id": 2}]
+    # explicit arguments win over the environment
+    lm.initialize_multihost("10.0.0.9:99", 8, 5)
+    assert calls[-1] == {"coordinator_address": "10.0.0.9:99",
+                         "num_processes": 8, "process_id": 5}
+    # no env, no args: auto-detect (Cloud TPU) — no kwargs passed
+    for var in ("JAX_COORDINATOR_ADDRESS", "JAX_NUM_PROCESSES",
+                "JAX_PROCESS_ID"):
+        monkeypatch.delenv(var)
+    lm.initialize_multihost()
+    assert calls[-1] == {}
+
+
+def test_train_cli_multihost_wiring(monkeypatch):
+    """--multihost routes the coordinator trio into
+    initialize_multihost before any training work."""
+    from repro.launch import mesh as lm
+    from repro.launch import train
+    calls = []
+    monkeypatch.setattr(
+        lm, "initialize_multihost",
+        lambda **kw: calls.append(kw))
+    train.main(["--engine", "bank", "--data-parallel", "1", "--rounds",
+                "0", "--multihost", "--coordinator", "h:1",
+                "--num-processes", "2", "--process-id", "1"])
+    assert calls == [{"coordinator_address": "h:1", "num_processes": 2,
+                      "process_id": 1}]
+
+
+def test_make_tier_mesh():
+    from repro.launch.mesh import make_tier_mesh
+    mesh = make_tier_mesh((2, 2, 2)) if jax.device_count() >= 8 else None
+    if mesh is not None:
+        from repro.core import collectives as col
+        assert col.flat_axis_size(mesh) == 8
+
+
+# ---------------------------------------------------------------------------
+# GroupRegistry proper (multidevice: 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def registry():
+    from repro.core.groups import get_registry
+    from repro.launch.mesh import make_tier_mesh
+    return get_registry(_FL3, make_tier_mesh(_FL3.hierarchy))
+
+
+@multidevice
+@needs_devices
+def test_registry_members_and_cache(registry):
+    from repro.core.groups import get_registry
+    assert registry is get_registry(registry.fl, registry.mesh)
+    dev = registry.tier("device")
+    edge = registry.tier("edge")
+    region = registry.tier("region")
+    assert dev.members == edge.members == (
+        (0, 1), (2, 3), (4, 5), (6, 7))
+    assert region.members == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert registry.tier(2) is region
+    assert "region" in registry.describe()
+
+
+@multidevice
+@needs_devices
+def test_registry_gossip_schedule_matches_mixing(registry):
+    """Each tier's edge-colored schedule applies exactly H_ℓ (rounds
+    mode), with per-parent matchings that never cross parents."""
+    for lvl in (1, 2):
+        sched = registry.gossip_schedule(lvl, _FL3.pi)
+        assert np.allclose(sched.dense_equivalent(),
+                           registry.mixing(lvl), atol=1e-12)
+    s1 = registry.gossip_schedule(1, _FL3.pi)
+    assert s1 is registry.gossip_schedule(1, _FL3.pi)   # cached
+    node = registry.hier.node_size(1)
+    for perm in s1.perms:
+        for src, dst in perm:
+            # gossip at tier 1 stays within the parent region
+            assert (src // 4) == (dst // 4)
+            assert src // node != dst // node
+
+
+@multidevice
+@needs_devices
+def test_registry_mean_matches_dense_operator(registry):
+    """registry.mean at each tier equals the dense block-average."""
+    from repro.sharding import replica_axes
+    from jax.sharding import PartitionSpec as P
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    raxes = replica_axes(registry.mesh)
+    spec = P(tuple(raxes) if len(raxes) > 1 else raxes[0], None)
+    for lvl in range(3):
+        got = registry.mean(x, spec, lvl)
+        t = registry.tier(lvl)
+        want = np.asarray(x).copy()
+        for g in t.members:
+            want[list(g)] = want[list(g)].mean(0)
+        assert np.allclose(np.asarray(got), want, atol=1e-6)
+
+
+@multidevice
+@needs_devices
+def test_registry_gossip_matches_dense_operator(registry):
+    """registry.gossip at tier ℓ equals rows mixed by the (n, n)
+    TierMix operator (mean ∘ gossip = the full tier_operator)."""
+    from repro.sharding import replica_axes
+    from jax.sharding import PartitionSpec as P
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    raxes = replica_axes(registry.mesh)
+    spec = P(tuple(raxes) if len(raxes) > 1 else raxes[0], None)
+    for lvl in (1, 2):
+        y = registry.mean(x, spec, lvl)
+        y = registry.gossip(y, spec, lvl, _FL3.pi)
+        W = registry.operator(lvl, _FL3.pi)
+        assert np.allclose(np.asarray(y), W @ np.asarray(x), atol=1e-5)
+
+
+@multidevice
+@needs_devices
+def test_registry_rejects_mismatched_mesh():
+    from repro.core.groups import GroupRegistry
+    from repro.launch.mesh import make_replica_mesh
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=2,
+                  devices_per_cluster=2)   # n=4 != 8
+    with pytest.raises(AssertionError, match="flat replica axis"):
+        GroupRegistry(fl, make_replica_mesh(NDEV))
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    raise SystemExit(pytest.main([__file__, "-x", "-q"]))

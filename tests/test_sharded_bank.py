@@ -270,3 +270,81 @@ def test_pi_decay_schedule_parity_and_recompile_bound(mesh):
     assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
     # decay_round=5 default: only the early program compiled so far
     assert len(sb._lowered) == 1
+
+
+# ---------------------------------------------------------------------------
+# GroupRegistry tiers + per-shard init (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+_FL3 = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                devices_per_cluster=2, tau=2, q=2, pi=2, topology="ring",
+                hierarchy=(2, 2, 2))
+
+
+def test_depth3_trajectory_parity(mesh):
+    """Depth-3 (device→edge→region) TierMix program: the registry-tier
+    lowering (per-tier psums + block-diagonal gossip matchings) matches
+    the dense single-device engine."""
+    ref, sb = _pair(_FL3, mesh)
+    for _ in range(3):
+        ref.step_round()
+        sb.step_round()
+    assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
+    assert _maxdiff(ref.bank.mom, sb.bank.mom) < ATOL
+
+
+def test_depth3_scenario_trajectory_parity(mesh):
+    """Masked/mobility depth-3 rounds take the dense-rotation path with
+    per-tier masked operators; parity must hold."""
+    sc = ScenarioConfig(name="t", speed_dist="lognormal", speed_spread=0.6,
+                        sample_fraction=0.75, move_prob=0.3, seed=7)
+    ref, sb = _pair(_FL3, mesh, scenario=sc)
+    for _ in range(3):
+        p1 = ref.step_round()
+        p2 = sb.step_round()
+        assert np.array_equal(p1.mask, p2.mask)
+    assert _maxdiff(ref.bank.params, sb.bank.params) < ATOL
+
+
+def test_depth3_round_has_no_allgather(mesh):
+    """A depth-3 TierMix round must still lower to grouped psums +
+    collective-permutes only — the region tier adds a wider psum and its
+    own matchings, never an all-gather of the bank."""
+    _, sb = _pair(_FL3, mesh)
+    assert sb._canonical.ops[-1].level == 2
+    b = sb.bank
+    args = sb._resolve_args(sb._canonical, None, fuse=True)
+    hlo = sb._round_flat.lower(
+        b.params, b.mom, None, sb.key, args,
+        sb._full_mask).compile().as_text()
+    assert "collective-permute" in hlo
+    assert "all-gather" not in hlo
+    assert "all-to-all" not in hlo
+
+
+def test_sharded_init_parity_and_no_full_bank(mesh, monkeypatch):
+    """Per-shard init (``ModelBank.from_model_sharded``) is bit-identical
+    to the old build-then-place path, and the sharded engine never calls
+    the full-bank constructor — init never materializes (n, T) on one
+    device (each addressable shard is the device's own (1, T) row)."""
+    from repro.core.modelbank import ModelBank
+    from repro.models.cnn import init_mlp_classifier
+    fl = _FL
+    one = init_mlp_classifier(jax.random.PRNGKey(0), 16, 32, 4)
+    old = ModelBank.from_model(one, fl.n)
+    old.place(jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None)))
+
+    def _forbidden(*a, **kw):
+        raise AssertionError(
+            "sharded init must not build the full bank on one device")
+    monkeypatch.setattr(ModelBank, "from_model", _forbidden)
+    init = lambda k: init_mlp_classifier(k, 16, 32, 4)   # noqa: E731
+    sb = ShardedBankCEFedAvg(init, apply_mlp_classifier, fl, _data(fl),
+                             mesh, lr=0.1, batch_size=16, seed=0)
+    assert np.array_equal(np.asarray(old.params), np.asarray(sb.bank.params))
+    assert np.array_equal(np.asarray(old.mom), np.asarray(sb.bank.mom))
+    T = sb.bank.layout.total
+    for buf in (sb.bank.params, sb.bank.mom):
+        assert all(s.data.shape == (1, T) for s in buf.addressable_shards)
+        assert buf.sharding == sb._row_sharding
