@@ -43,6 +43,8 @@ import sys
 #   floor    smoke >= baseline / tol          (higher is better)
 #   ceiling  smoke <= max(1, baseline) * tol  (lower is better, smoke
 #            shapes may legitimately sit near 1)
+#   cap1     smoke <= 1.0 exactly (deterministic clock math, identical
+#            on every host — no tolerance)
 # The boundary benchmark runs at the real FEMNIST bank size even under
 # --smoke (the fused-pass advantage is scale-dependent), so its record
 # name matches the baseline's; only the compaction rounds shrink — a
@@ -55,6 +57,10 @@ CHECKS = (
     ("half/full_round_time", ("kern_compaction_ratio_femnist_cnn",
                               "kern_compaction_ratio_mlp_smoke"),
      "kern_compaction_ratio_mlp_smoke", "ceiling"),
+    # async rounds must never charge MORE wall clock than the barrier —
+    # pure deterministic clock math, so no host tolerance: hard cap 1.0
+    ("async/barrier_makespan", ("clock_async_s2_lognormal",),
+     "clock_async_s2_lognormal", "cap1"),
 )
 
 _NUM = r"([-+0-9.eE]+)"
@@ -99,6 +105,11 @@ def check(smoke_records, baseline_records, tolerance: float):
             bound = base / tolerance
             ok = smoke >= bound
             rel = f">= {bound:.2f}"
+        elif mode == "cap1":
+            # deterministic contract, tolerance-free: never above 1.0
+            bound = 1.0 + 1e-9
+            ok = smoke <= bound
+            rel = "<= 1.00"
         else:
             bound = max(1.0, base) * tolerance
             ok = smoke <= bound

@@ -346,8 +346,49 @@ def roof(full=False):
             f"useful={r['useful_ratio']:.3f}")
 
 
+def async_clock(full=False, smoke=False):
+    """Async bounded-staleness vs barrier makespan — pure clock math,
+    deterministic and host-independent: cumulative wall clock over N
+    rounds of the canonical CE-FedAvg program on the lognormal
+    straggler fleet with client sampling (the run_async benchmark
+    scenario), charged barrier (`charge_program`) vs async
+    (`charge_program_async`, carried across rounds). The s=2 record's
+    ``async/barrier_makespan`` ratio is a regression contract: async
+    must never charge MORE than the barrier (check_regression caps it
+    at 1.0)."""
+    import dataclasses
+
+    from repro.core.clock import EventClock
+    from repro.core.runtime import compute_bound_runtime_model
+    from repro.core.scenario import ScenarioEngine, get_scenario
+    fl = _fl(m=4, dpc=4, tau=2, q=4)
+    prog = fl.round_program()
+    rt = compute_bound_runtime_model()
+    sc = dataclasses.replace(get_scenario("lognormal"), speed_spread=0.6,
+                             sample_fraction=0.25, dropout_prob=0.1)
+    rounds = 8 if smoke else 24
+    eng = ScenarioEngine(sc, fl)
+    realized = []
+    for _ in range(rounds):
+        plan = eng.step()
+        speeds = np.asarray(eng.speed_multipliers) * rt.hw.device_flops
+        realized.append((speeds, np.asarray(plan.mask, float),
+                         np.asarray(plan.labels)))
+    for s in (1, 2, 4):
+        with Timer() as t:
+            cb, ca = EventClock(rt, fl), EventClock(rt, fl)
+            for speeds, mask, labels in realized:
+                cb.charge_program(prog, speeds, mask)
+                ca.charge_program_async(prog, speeds, mask, staleness=s,
+                                        labels=labels)
+        row(f"clock_async_s{s}_lognormal", t.dt * 1e6 / rounds,
+            f"async/barrier_makespan={ca.now / cb.now:.4f};"
+            f"rounds={rounds};async_s={ca.now:.1f};barrier_s={cb.now:.1f}")
+
+
 BENCHES = {"fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
-           "fig6": fig6, "tab1": tab1, "kern": kern, "roof": roof}
+           "fig6": fig6, "tab1": tab1, "kern": kern, "roof": roof,
+           "async": async_clock}
 
 
 def main() -> None:

@@ -451,7 +451,8 @@ class FLSimulator:
         (Y, M), _ = jax.lax.scan(local_step, (Y, M), xs_)
         return Y, M
 
-    def _lower_flat(self, program: prg.RoundProgram):
+    def _lower_flat(self, program: prg.RoundProgram,
+                    block_keyed: bool = False):
         """Compile a RoundProgram to the flat global round: all state
         stays (n, T); each MixGroup is one streaming pass
         (``gossip_mix_rows``) of its fused operator — for the canonical
@@ -459,7 +460,14 @@ class FLSimulator:
         arrives pre-fused as ``W_inter @ W_intra`` (the delta/upload
         path keeps the first mix separate, where the fold is invalid).
         Identical consecutive blocks compile to ONE ``lax.scan``;
-        buffers are donated so peak memory stays ~1× the bank."""
+        buffers are donated so peak memory stays ~1× the bank.
+
+        ``block_keyed`` lowers a SINGLE-block program that consumes the
+        passed key directly instead of splitting it — the async event
+        executor (:meth:`step_round_async`) splits the round key into
+        per-block keys on the host (``jax.random.split`` is
+        deterministic in or out of jit) and replays one block per
+        event, so each device sees exactly the barrier key schedule."""
         n = self.sched.n
         comp, dp = self.compression, self.dp
         xs, ys = self.data["xs"], self.data["ys"]
@@ -468,6 +476,8 @@ class FLSimulator:
         plans = prg.lowering_plan(program, fuse=True)
         runs = prg.block_runs(plans)
         nblocks = len(plans)
+        assert not block_keyed or nblocks == 1, \
+            "block_keyed lowers single-block programs"
 
         def upload(delta, R, key, bp):
             """Flat-domain device uploads: DP then compression, row-wise
@@ -509,7 +519,8 @@ class FLSimulator:
         def global_round(Y, M, R, key, args, mask):
             act2d = (mask > 0.5)[:, None]
             tau_dev = args.tau_dev
-            keys = jax.random.split(key, nblocks)
+            keys = (key[None] if block_keyed
+                    else jax.random.split(key, nblocks))
             mi = ki = 0
             for bp, count in runs:
                 gm = args.mats[mi:mi + len(bp.groups)]
@@ -594,6 +605,8 @@ class FLSimulator:
         if fn is None:
             lower = {"legacy": self._lower_legacy,
                      "flat": self._lower_flat,
+                     "flat_block": functools.partial(self._lower_flat,
+                                                     block_keyed=True),
                      "compact": self._lower_compact}[kind]
             fn = lower(program)
             self._lowered[key] = fn
@@ -769,6 +782,111 @@ class FLSimulator:
         fn = self._get_round("flat", program)
         b.params, b.mom, b.residual = fn(b.params, b.mom, b.residual, k,
                                          args, mask)
+        return plan
+
+    def step_round_async(self, staleness: int, rt, *,
+                         uplink_ratio: float = 1.0):
+        """Advance ONE global round in async bounded-staleness mode.
+
+        Instead of one barrier round, the round's blocks execute as a
+        per-cluster *event sequence*:
+        :func:`repro.core.clock.async_program_timeline` schedules when
+        each cluster clears each block under the wait rule (own previous
+        block done AND every dependency neighbor within ``staleness``
+        blocks), and each event replays that block for its advancing
+        clusters only — local steps masked to their devices, the block's
+        fused mixing operator gated by
+        :func:`repro.core.gossip.staleness_mask` so a boundary never
+        reads a model more than ``staleness`` blocks away. At
+        ``staleness == 0`` every event advances all clusters in lockstep
+        with the unmodified operator and the barrier key schedule,
+        reproducing ``step_round``'s flat path (the parity anchor
+        ``tests/test_async.py`` fuzzes).
+
+        ``rt`` is the :class:`repro.core.runtime.RuntimeModel` whose
+        compute/comm pricing orders the events (the model state only
+        depends on the event *order*, not the absolute times). Only
+        plain programs are supported — upload blocks carry
+        error-feedback residual state that is not staleness-safe — and
+        only the bank engines. Returns the round's ``RoundPlan`` (or
+        None without a scenario) and records ``last_async`` with the
+        timeline, the staleness bound, the cumulative per-cluster phase
+        vector, and a per-event trace (pre-advance phases + realized
+        cross-cluster gossip edges of the masked operator)."""
+        assert self.bank is not None, \
+            "async bounded-staleness execution requires a bank engine"
+        from repro.core import clock as clk
+        from repro.core import gossip as gsp
+        if self.engine is not None:
+            plan = self.engine.step()
+            self.labels = plan.labels
+            mask_np = plan.mask
+        else:
+            plan = None
+            mask_np = None
+        r = self.round_index
+        self.round_index += 1
+        program = (self._schedule_fn(r, plan)
+                   if self._schedule_fn is not None else self._canonical)
+        assert not program.has_upload, \
+            "async mode supports plain programs only (no upload/EF state)"
+        self.last_program = program
+        m = self.fl.num_clusters
+        mult = (None if self.engine is None
+                else np.asarray(self.engine.speed_multipliers, float))
+        fleet = None if mult is None else mult * rt.hw.device_flops
+        # per-cluster timeline carried across rounds — same evolution as
+        # EventClock.charge_program_async's, so the executor's event
+        # order matches the charged timeline; s=0 is a pure barrier, so
+        # it forgets any staggered front a previous async round left
+        carry = (None if staleness == 0
+                 else getattr(self, "_async_carry", None))
+        tl = clk.async_program_timeline(
+            rt, self.fl, program, fleet, mask_np, self.labels,
+            staleness, uplink_ratio, carry=carry)
+        self._async_carry = None if staleness == 0 else tl["carry_out"]
+        bprogs = prg.block_programs(program)
+        nblocks = len(bprogs)
+        base_args = [self._resolve_args(bp, plan, fuse=True)
+                     for bp in bprogs]
+        cohort = (np.ones(self.sched.n) if mask_np is None
+                  else np.asarray(mask_np, float))
+        self.key, k = jax.random.split(self.key)
+        # host-side split == the barrier round's in-jit split of k
+        bkeys = jax.random.split(k, nblocks)
+        b = self.bank
+        self.last_bucket = b.n
+        phases = np.zeros(m, dtype=int)
+        trace: List[Dict[str, Any]] = []
+        for ev in tl["events"]:
+            adv = np.zeros(m, dtype=bool)
+            adv[list(ev.clusters)] = True
+            assert (phases[adv] == ev.block).all(), "phase skew"
+            base = base_args[ev.block]
+            assert len(base.mats) == 1  # fused plain block: one MixGroup
+            Wm = gsp.staleness_mask(np.asarray(base.mats[0]),
+                                    self.labels, phases, staleness, adv)
+            ev_mask = jnp.asarray(cohort * adv[self.labels], jnp.float32)
+            args = prg.RoundArgs((jnp.asarray(Wm),), base.tau_dev)
+            fn = self._get_round("flat_block", bprogs[ev.block])
+            b.params, b.mom, b.residual = fn(
+                b.params, b.mom, b.residual, bkeys[ev.block], args,
+                ev_mask)
+            cross = ((np.asarray(Wm) != 0)
+                     & (self.labels[:, None] != self.labels[None, :]))
+            ii, jj = np.nonzero(cross)
+            edges = sorted({(int(a), int(c)) for a, c in
+                            zip(self.labels[ii], self.labels[jj])})
+            trace.append({"time": ev.time, "block": ev.block,
+                          "clusters": ev.clusters,
+                          "phases": phases.copy(), "edges": edges})
+            phases[adv] += 1
+        assert (phases == nblocks).all(), "round left clusters mid-phase"
+        self._async_phases = (getattr(self, "_async_phases",
+                                      np.zeros(m, dtype=int)) + phases)
+        self.last_async = {"timeline": tl, "trace": trace,
+                           "staleness": int(staleness),
+                           "phases": self._async_phases.copy()}
         return plan
 
     def run(self, rounds: int, eval_every: int = 1,

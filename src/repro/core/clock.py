@@ -33,12 +33,13 @@ cluster speeds without oracle access.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.config import FLConfig
 from repro.core import program as prg
+from repro.core import topology as topo
 from repro.core.runtime import RuntimeModel
 
 
@@ -126,31 +127,209 @@ def program_comm_time(rt: RuntimeModel, algorithm: str,
 
     The canonical program reduces to ``rt.comm_time(algorithm, q, π)``.
     """
+    return float(sum(block_comm_times(rt, algorithm, program,
+                                      uplink_ratio)))
+
+
+def block_comm_times(rt: RuntimeModel, algorithm: str,
+                     program: "prg.RoundProgram",
+                     uplink_ratio: float = 1.0) -> List[float]:
+    """Per-block communication seconds — the same §6.1 pricing that
+    :func:`program_comm_time` sums, kept as a list so the async timeline
+    (:func:`async_program_timeline`) can charge each block's boundary on
+    its own cluster's timeline instead of once per barrier."""
     hw = rt.hw
     W = rt.wl.model_bits(hw)
     Wu = W * uplink_ratio
-    t = 0.0
+    out: List[float] = []
     for b in program.blocks():
         n_intra = sum(m.level == 0 for m in b.mixes)
         inters = [m for m in b.mixes if m.level >= 1]
         if algorithm == "ce_fedavg":
-            t += n_intra * Wu / hw.b_d2e
+            t = n_intra * Wu / hw.b_d2e
             t += sum(m.pi * W / hw.tier_bandwidth(m.level)
                      for m in inters)
         elif algorithm == "hier_favg":
             # cloud hop carries the full model (uncompressed), matching
             # RuntimeModel.comm_time's (q-1)·Wu/b_d2e + W/b_d2c
             charged = max(0, n_intra - len(inters)) if inters else n_intra
-            t += charged * Wu / hw.b_d2e + len(inters) * W / hw.b_d2c
+            t = charged * Wu / hw.b_d2e + len(inters) * W / hw.b_d2c
         elif algorithm == "fedavg":
-            t += len(inters) * Wu / hw.b_d2c
+            t = len(inters) * Wu / hw.b_d2c
         elif algorithm == "local_edge":
-            t += n_intra * Wu / hw.b_d2e
+            t = n_intra * Wu / hw.b_d2e
         elif algorithm == "dec_local_sgd":
-            t += sum(m.pi for m in inters) * W / hw.b_e2e
+            t = sum(m.pi for m in inters) * W / hw.b_e2e
         else:
             raise ValueError(algorithm)
-    return t
+        out.append(float(t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# async bounded-staleness timelines
+# ---------------------------------------------------------------------------
+
+def async_adjacency(fl: FLConfig) -> np.ndarray:
+    """(m, m) boolean cluster-dependency graph of the async wait rule.
+
+    Cluster i's block-``b`` boundary must wait on cluster j's phase
+    exactly when j's model can reach i through that boundary:
+    ``local_edge`` never crosses edges (identity); ``fedavg`` /
+    ``hier_favg`` aggregate globally (complete); ``ce_fedavg`` /
+    ``dec_local_sgd`` read backhaul neighbors (tier-1 adjacency ∪ self).
+    Depth>2 hierarchies are treated conservatively as complete — a
+    ``TierMix(ℓ>=2)`` spans sibling groups of edges."""
+    m = fl.num_clusters
+    eye = np.eye(m, dtype=bool)
+    if fl.algorithm == "local_edge":
+        return eye
+    hier = topo.Hierarchy.from_config(fl)
+    if fl.algorithm in ("fedavg", "hier_favg") or hier.depth > 2:
+        return np.ones((m, m), dtype=bool)
+    adj = np.asarray(hier.adjacency(1, fl.topology, fl)) > 0
+    return adj | eye
+
+
+class AsyncEvent(NamedTuple):
+    """One async phase advance: at ``time``, the ``clusters`` listed
+    apply block ``block``'s mixing boundary together (equal completion
+    times coalesce into one event — at s=0 every block is exactly one
+    all-cluster event, the barrier degeneracy)."""
+    time: float
+    block: int
+    clusters: Tuple[int, ...]
+
+
+def _cluster_block_compute(rt: RuntimeModel, program: "prg.RoundProgram",
+                           speeds, mask, labels: np.ndarray,
+                           m: int) -> np.ndarray:
+    """(m, B) per-cluster compute seconds: per block, max over the
+    cluster's *active* devices of steps_d·C/c_d, 0 when the whole
+    cluster dropped out (it still phase-advances — see
+    :func:`async_program_timeline`)."""
+    C = rt.wl.flops_per_step
+    n = len(labels)
+    if speeds is None:
+        if rt.speeds and len(rt.speeds) == n:
+            speeds = np.asarray(rt.speeds, float)
+        else:
+            speeds = np.full(n, rt.hw.device_flops)
+    speeds = np.asarray(speeds, float)
+    active = (np.ones(n, dtype=bool) if mask is None
+              else np.asarray(mask) > 0)
+    blocks = program.blocks()
+    comp = np.zeros((m, len(blocks)))
+    tau_dev = program.tau_dev
+    for bi, b in enumerate(blocks):
+        op = b.local
+        if op.adaptive and tau_dev is not None:
+            steps = np.minimum(np.asarray(tau_dev, float), float(op.tau))
+        else:
+            steps = np.full(n, float(op.tau))
+        tvec = steps * C / speeds
+        for c in range(m):
+            sel = active & (labels == c)
+            comp[c, bi] = float(tvec[sel].max()) if sel.any() else 0.0
+    return comp
+
+
+def async_program_timeline(rt: RuntimeModel, fl: FLConfig,
+                           program: "prg.RoundProgram",
+                           speeds=None, mask=None, labels=None,
+                           staleness: int = 0,
+                           uplink_ratio: float = 1.0,
+                           carry: Optional[Dict[str, object]] = None
+                           ) -> Dict[str, object]:
+    """Per-cluster event timeline of one async bounded-staleness round.
+
+    Each cluster advances through the program's blocks on its own
+    timeline: block b starts when the cluster's own block b−1 completed
+    AND every dependency neighbor (:func:`async_adjacency`) has cleared
+    block b−s, so a boundary only ever reads models at most ``s`` blocks
+    stale. ``staleness == 0`` is the global barrier: every block is one
+    all-cluster event and the makespan telescopes to the barrier sum
+    Σ_b (max_c comp + comm). For s ≥ 1 the makespan is never larger
+    than the barrier's (each start time is bounded by the barrier's, by
+    induction over blocks) — fast clusters hide stragglers' compute.
+
+    ``carry`` couples consecutive rounds into ONE continuous block
+    sequence — the source of async's wall-clock win, since within a
+    single common-start round the slowest cluster's serial chain equals
+    the barrier sum whenever per-cluster compute is block-constant. It
+    holds the previous round's per-cluster end times (``"T_end"``) and
+    last ``s`` completion columns (``"cols"``), so block b < s of this
+    round waits on neighbors' block B−s+b of the PREVIOUS round instead
+    of a global round barrier: clusters flow through the round boundary
+    bounded-stale the whole way, and the per-round bottleneck cluster
+    (sampling/mobility re-draw it every round) no longer paces everyone
+    else. ``staleness == 0`` still barriers at ``T_end.max()``.
+
+    Returns ``{"T", "start", "comp", "comm", "events", "makespan",
+    "adjacency", "carry_out"}`` where ``T``/``start``/``comp`` are
+    (m, B) arrays, ``comm`` is (B,), ``events`` is the
+    (time, block)-sorted :class:`AsyncEvent` list the executor replays,
+    ``makespan`` is the absolute max end time, and ``carry_out`` feeds
+    the next round."""
+    m = fl.num_clusters
+    if labels is None:
+        labels = np.repeat(np.arange(m), fl.devices_per_cluster)
+    labels = np.asarray(labels)
+    blocks = program.blocks()
+    B = len(blocks)
+    comm = np.asarray(block_comm_times(rt, fl.algorithm, program,
+                                       uplink_ratio))
+    comp = _cluster_block_compute(rt, program, speeds, mask, labels, m)
+    adj = async_adjacency(fl)
+    # a block only couples clusters when its boundary actually crosses
+    # them: intra-only blocks (every mix at level 0) impose no
+    # cross-cluster wait — their operators are cluster-block-diagonal,
+    # so neighbors' phases are irrelevant until the next gossip block
+    eye_m = np.eye(m, dtype=bool)
+    block_adj = [adj if any(mx.level >= 1 for mx in blk.mixes) else eye_m
+                 for blk in blocks]
+    s = int(staleness)
+    if carry is not None:
+        t0 = np.asarray(carry["T_end"], float)
+        cols = [np.asarray(c, float) for c in carry.get("cols", [])]
+    else:
+        t0 = np.zeros(m)
+        cols = []
+    T = np.zeros((m, B))
+    start = np.zeros((m, B))
+    for b in range(B):
+        prev = T[:, b - 1] if b else t0
+        if s == 0:
+            start[:, b] = prev.max()
+            T[:, b] = (start[:, b] + comp[:, b] + comm[b]).max()
+        else:
+            if b - s >= 0:
+                ref = T[:, b - s]
+            else:
+                # reach back into the previous round's trailing columns
+                gi = len(cols) + b - s
+                ref = cols[gi] if 0 <= gi < len(cols) else None
+            if ref is None:
+                wait = np.zeros(m)
+            else:
+                ab = block_adj[b]
+                wait = np.array([ref[ab[i]].max() for i in range(m)])
+            start[:, b] = np.maximum(prev, wait)
+            T[:, b] = start[:, b] + comp[:, b] + comm[b]
+    events: List[AsyncEvent] = []
+    for b in range(B):
+        for t in np.unique(T[:, b]):
+            cl = tuple(int(c) for c in np.nonzero(T[:, b] == t)[0])
+            events.append(AsyncEvent(float(t), b, cl))
+    # (time, block) ascending: simultaneous completions apply the
+    # earlier block first, which is what bounds the realized phase gap
+    # by s even under zero-compute ties
+    events.sort(key=lambda e: (e.time, e.block))
+    cols_out = (cols + [T[:, b].copy() for b in range(B)])[-max(s, 1):]
+    return {"T": T, "start": start, "comp": comp, "comm": comm,
+            "events": events, "makespan": float(T[:, -1].max()),
+            "adjacency": adj,
+            "carry_out": {"T_end": T[:, -1].copy(), "cols": cols_out}}
 
 
 class EventClock:
@@ -159,6 +338,9 @@ class EventClock:
     def __init__(self, rt: RuntimeModel, fl: FLConfig):
         self.rt, self.fl = rt, fl
         self.now = 0.0
+        # per-cluster async timeline carried across charge_program_async
+        # rounds (None until the first async charge)
+        self._async_carry: Optional[Dict[str, object]] = None
 
     def charge_round(self, speeds: Optional[Sequence[float]] = None,
                      uplink_ratio: float = 1.0) -> float:
@@ -189,10 +371,42 @@ class EventClock:
                                          program, uplink_ratio))
         return self.now
 
+    def charge_program_async(self, program: "prg.RoundProgram",
+                             speeds: Optional[Sequence[float]] = None,
+                             mask: Optional[np.ndarray] = None,
+                             uplink_ratio: float = 1.0, *,
+                             staleness: int,
+                             labels: Optional[np.ndarray] = None) -> float:
+        """Advance the clock by one *async* round of ``program``: the
+        per-cluster timeline (:func:`async_program_timeline`) is carried
+        ACROSS rounds, so fast clusters flow through round boundaries
+        and the clock reads the max cluster end time instead of summing
+        max-over-participants barriers. At ``staleness == 0`` this
+        delegates to :meth:`charge_program` — exactly equal, not merely
+        close, the barrier-degeneracy anchor ``tests/test_clock.py``
+        asserts."""
+        if staleness == 0:
+            self._async_carry = None
+            return self.charge_program(program, speeds, mask,
+                                       uplink_ratio)
+        if self._async_carry is None:
+            self._async_carry = {
+                "T_end": np.full(self.fl.num_clusters, self.now),
+                "cols": []}
+        tl = async_program_timeline(self.rt, self.fl, program, speeds,
+                                    mask, labels, staleness,
+                                    uplink_ratio,
+                                    carry=self._async_carry)
+        self._async_carry = tl["carry_out"]
+        self.now = float(tl["makespan"])
+        return self.now
+
 
 def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
                    eval_every: int = 1, eval_batch: int = 512,
-                   uplink_ratio: float = 1.0) -> Dict[str, List[float]]:
+                   uplink_ratio: float = 1.0,
+                   async_staleness: Optional[int] = None
+                   ) -> Dict[str, List[float]]:
     """Drive ``sim`` (an FLSimulator) for ``rounds`` global rounds under
     the event clock, returning a history dict with ``round``,
     ``wall_time``, ``acc``, ``loss`` and ``participants`` columns.
@@ -208,6 +422,12 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
     perf-trajectory instrumentation the benchmarks read to verify that,
     e.g., a 50%-participation round really does less gradient work than a
     full one (ModelBank cohort compaction, docs/PERFORMANCE.md).
+
+    ``async_staleness`` switches the loop to bounded-staleness execution:
+    rounds run through ``sim.step_round_async`` (per-cluster phase
+    advance, staleness-masked boundaries) and are charged the overlapped
+    timeline's makespan via :meth:`EventClock.charge_program_async`.
+    ``async_staleness=0`` reproduces the barrier loop exactly.
     """
     clock = EventClock(rt, sim.fl)
     hist: Dict[str, List[float]] = {
@@ -215,7 +435,11 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
         "participants": [], "sim_s": []}
     window_t0 = time.perf_counter()
     for r in range(rounds):
-        plan = sim.step_round()
+        if async_staleness is None:
+            plan = sim.step_round()
+        else:
+            plan = sim.step_round_async(async_staleness, rt,
+                                        uplink_ratio=uplink_ratio)
         program = getattr(sim, "last_program", None)
         if plan is not None:
             mult = np.asarray(sim.engine.speed_multipliers, float)
@@ -227,9 +451,15 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
         if program is not None:
             # per-op pricing: adaptive/non-canonical programs are
             # charged exactly the ops they executed
-            t = clock.charge_program(
-                program, fleet, None if plan is None else plan.mask,
-                uplink_ratio)
+            if async_staleness is None:
+                t = clock.charge_program(
+                    program, fleet, None if plan is None else plan.mask,
+                    uplink_ratio)
+            else:
+                t = clock.charge_program_async(
+                    program, fleet, None if plan is None else plan.mask,
+                    uplink_ratio, staleness=async_staleness,
+                    labels=None if plan is None else plan.labels)
         else:
             speeds = (None if fleet is None
                       else fleet[np.asarray(plan.mask) > 0])

@@ -39,6 +39,43 @@ from repro.core import collectives as col
 # host-side schedule construction
 # ---------------------------------------------------------------------------
 
+def staleness_mask(W: np.ndarray, labels: np.ndarray, phases: np.ndarray,
+                   staleness: int, advancing: np.ndarray) -> np.ndarray:
+    """Gate a dense (n, n) mixing operator for ONE async event.
+
+    In bounded-staleness execution (``FLSimulator.step_round_async``) a
+    mixing boundary fires per *cluster* as soon as that cluster's own
+    block clears. ``advancing`` marks the clusters applying this
+    boundary: every other device row becomes the identity (their models
+    are frozen until their own boundary fires). ``phases`` counts blocks
+    completed per cluster; advancing rows additionally drop columns of
+    clusters whose phase lags (or leads) the advancing phase by more
+    than ``staleness``, folding the removed mass onto the diagonal so
+    rows stay stochastic — reading a neighbor within the bound is the
+    whole point of async (a bounded-stale read), reading past it is
+    forbidden.
+
+    When every cluster advances at one common phase (the s = 0 barrier
+    degeneracy) the operator is returned unchanged, bit for bit — the
+    correctness anchor ``tests/test_async.py`` leans on."""
+    labels = np.asarray(labels)
+    phases = np.asarray(phases)
+    adv = np.asarray(advancing, bool)
+    if adv.all() and (phases == phases[0]).all():
+        return np.asarray(W, np.float32)
+    n = W.shape[0]
+    Wm = np.array(W, np.float32, copy=True)
+    p = int(phases[adv][0]) if adv.any() else 0
+    keep_col = (np.abs(phases - p) <= staleness)[labels]     # (n,)
+    row_adv = adv[labels]                                    # (n,)
+    Wm = np.where(keep_col[None, :], Wm, 0.0)
+    Wm[~row_adv] = np.eye(n, dtype=np.float32)[~row_adv]
+    deficit = np.where(row_adv,
+                       np.asarray(W, np.float64).sum(1) - Wm.sum(1), 0.0)
+    Wm[np.arange(n), np.arange(n)] += deficit.astype(np.float32)
+    return Wm
+
+
 def color_edges(adj: np.ndarray) -> List[Dict[int, int]]:
     """Partition the directed edge set into partial matchings.
 

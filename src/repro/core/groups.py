@@ -29,6 +29,7 @@ from typing import Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.config import FLConfig
@@ -111,6 +112,19 @@ class GroupRegistry:
         contiguous assignment (the legacy/flat engines' form)."""
         return self.hier.tier_operator(
             level, pi, self.fl.topology, self.fl.mixing, self.fl)
+
+    def stale_operator(self, level: int, pi: int, phases, staleness: int,
+                       advancing):
+        """Dense ``TierMix(level, pi)`` operator gated for one async
+        event: clusters in ``advancing`` apply the boundary reading only
+        neighbors whose phase is within ``staleness`` of theirs; all
+        other device rows are identity (see
+        :func:`repro.core.gossip.staleness_mask`). Degenerates to
+        :meth:`operator` when every cluster advances at one phase."""
+        labels = np.repeat(np.arange(self.fl.num_clusters),
+                           self.fl.devices_per_cluster)
+        return gsp.staleness_mask(self.operator(level, pi), labels,
+                                  phases, staleness, advancing)
 
     def gossip_schedule(self, level: int, pi: int,
                         mode: str = "rounds") -> gsp.GossipSchedule:

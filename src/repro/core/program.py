@@ -241,6 +241,35 @@ class RoundProgram:
         return dataclasses.replace(self, tau_dev=tau_dev)
 
 
+def block_programs(program: RoundProgram) -> Tuple[RoundProgram, ...]:
+    """Split a program into one single-block program per block, in block
+    order — the unit of work an async bounded-staleness round executes
+    per cluster event (``FLSimulator.step_round_async``).
+
+    Each piece keeps the parent's ``MaskRenorm`` directive and, for
+    adaptive blocks, a ``tau_dev`` binding clipped to that block's τ (the
+    per-block effective cutoff, so validation and execution match the
+    parent program's semantics block for block). Identical blocks share
+    a signature, so lowering the pieces reuses one compiled round per
+    distinct block."""
+    prefix: Tuple[Op, ...] = ((MaskRenorm(),) if program.mask_renorm
+                              else ())
+    out: List[RoundProgram] = []
+    for b in program.blocks():
+        ops: List[Op] = [b.local]
+        if b.privatize:
+            ops.append(Privatize())
+        if b.compress:
+            ops.append(Compress())
+        ops.extend(b.mixes)
+        td = None
+        if b.local.adaptive and program.tau_dev is not None:
+            td = np.minimum(np.asarray(program.tau_dev),
+                            b.local.tau).astype(np.int32)
+        out.append(RoundProgram(prefix + tuple(ops), tau_dev=td))
+    return tuple(out)
+
+
 def _parse_blocks(ops: Sequence[Op]) -> Tuple[Block, ...]:
     blocks: List[Block] = []
     i, N = 0, len(ops)

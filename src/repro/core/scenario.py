@@ -9,9 +9,10 @@ global round at a time:
 - **heterogeneity** — per-device speed multipliers drawn once from a
   uniform / lognormal / bimodal distribution (all mean ≈ 1 so profiles
   stay comparable to the homogeneous §6.1 constants);
-- **client sampling** — each round a ⌈fraction·n⌉ cohort is drawn, then
-  thinned by straggler dropout; non-participants neither compute nor
-  upload, and the V/A/H-operators are renormalized over the cohort
+- **client sampling** — each round every cluster draws a
+  ⌈fraction·|cluster|⌉ cohort of its members, thinned by straggler
+  dropout; non-participants neither compute nor upload, and the
+  V/A/H-operators are renormalized over the cohort
   (``topology.masked_*``);
 - **mobility** — each device re-associates to a uniformly random other
   edge with probability ``move_prob`` per round (never emptying its
@@ -122,12 +123,27 @@ class ScenarioEngine:
 
     Deterministic given ``sc.seed``: two engines with the same config
     produce the same speed draw, cohort sequence and mobility trace, so
-    different algorithms can be compared under identical conditions."""
+    different algorithms can be compared under identical conditions.
+
+    Every per-round draw is *keyed*, not sequential: mobility and
+    sampling read counter-based generators seeded by
+    ``(seed, round_idx, stream, cluster_id)`` (:meth:`_round_rng`), so
+    a round's realized randomness never depends on how many draws any
+    other round — or any other cluster — consumed before it. That is
+    what keeps async bounded-staleness execution (clusters advancing
+    out of lockstep, ``FLSimulator.step_round_async``) on exactly the
+    same cohort/mobility trace as the barrier run."""
+
+    #: stream tags for :meth:`_round_rng` (distinct per draw purpose)
+    _STREAM_MOBILITY = 1
+    _STREAM_SAMPLING = 2
 
     def __init__(self, sc: ScenarioConfig, fl: FLConfig):
         sc.validate()
         fl.validate()
         self.sc, self.fl = sc, fl
+        # one-time draws only (the per-device speed multipliers); every
+        # per-round draw goes through the keyed _round_rng streams
         self.rng = np.random.default_rng(sc.seed)
         self.labels = np.repeat(np.arange(fl.num_clusters),
                                 fl.devices_per_cluster)
@@ -140,43 +156,70 @@ class ScenarioEngine:
         self.round_index = 0
 
     # -- per-round draws -----------------------------------------------------
+    def _round_rng(self, round_idx: int, stream: int,
+                   cluster: int = 0) -> np.random.Generator:
+        """Counter-based generator keyed by
+        ``(seed, round_idx, stream, cluster)``: the same (round,
+        cluster) always sees the same randomness regardless of draw
+        order, interleaving, or extra draws elsewhere."""
+        return np.random.default_rng(np.random.SeedSequence(
+            [int(self.sc.seed), int(round_idx), int(stream), int(cluster)]))
+
     def _step_mobility(self) -> None:
         """Re-associate each device w.p. ``move_prob`` to a uniform other
         edge. A move that would empty the source cluster is skipped: an
         edge with no attached devices has no model to gossip, and the
-        operator algebra (and the paper's B_t) assume nonempty clusters."""
+        operator algebra (and the paper's B_t) assume nonempty clusters.
+
+        Draws are keyed per (round, source cluster) and applied in fixed
+        cluster order, so the re-drawn B_t is identical whether the
+        engine is driven by a barrier or an async round."""
         m = self.fl.num_clusters
         if self.sc.move_prob <= 0.0 or m < 2:
             return
         labels = self.labels.copy()
-        movers = np.nonzero(self.rng.random(labels.shape[0])
-                            < self.sc.move_prob)[0]
         sizes = np.bincount(labels, minlength=m)
-        for k in movers:
-            if sizes[labels[k]] <= 1:
+        for c in range(m):
+            members = np.nonzero(self.labels == c)[0]
+            if members.size == 0:
                 continue
-            dst = int(self.rng.integers(0, m - 1))
-            if dst >= labels[k]:
-                dst += 1
-            sizes[labels[k]] -= 1
-            sizes[dst] += 1
-            labels[k] = dst
+            rng = self._round_rng(self.round_index, self._STREAM_MOBILITY, c)
+            moves = rng.random(members.size) < self.sc.move_prob
+            dsts = rng.integers(0, m - 1, members.size)
+            for k, moved, dst in zip(members, moves, dsts):
+                if not moved or sizes[labels[k]] <= 1:
+                    continue
+                dst = int(dst)
+                if dst >= labels[k]:
+                    dst += 1
+                sizes[labels[k]] -= 1
+                sizes[dst] += 1
+                labels[k] = dst
         self.labels = labels
 
     def _draw_mask(self) -> np.ndarray:
-        """⌈fraction·n⌉ devices sampled uniformly, thinned by straggler
-        dropout; re-drawn until at least one device survives."""
+        """Per-cluster stratified cohort: each cluster samples
+        ⌈fraction·|cluster|⌉ of its members, thinned by straggler
+        dropout, from a generator keyed by (round, cluster). Reduces to
+        the global ⌈fraction·n⌉ cardinality for equal clusters, and
+        guarantees at least one surviving device overall (pathological
+        dropout keeps the first sampled device)."""
         n = self.fl.n
-        k = max(1, int(np.ceil(self.sc.sample_fraction * n)))
-        for _ in range(100):
-            mask = np.zeros(n)
-            cohort = self.rng.choice(n, size=k, replace=False)
-            kept = cohort[self.rng.random(k) >= self.sc.dropout_prob]
-            mask[kept] = 1.0
-            if mask.sum() > 0:
-                return mask
         mask = np.zeros(n)
-        mask[cohort[0]] = 1.0  # pathological dropout: keep one device
+        first = None
+        for c in range(self.fl.num_clusters):
+            members = np.nonzero(self.labels == c)[0]
+            if members.size == 0:
+                continue
+            rng = self._round_rng(self.round_index, self._STREAM_SAMPLING, c)
+            k = max(1, int(np.ceil(self.sc.sample_fraction * members.size)))
+            cohort = members[rng.choice(members.size, size=k, replace=False)]
+            if first is None:
+                first = int(cohort[0])
+            kept = cohort[rng.random(k) >= self.sc.dropout_prob]
+            mask[kept] = 1.0
+        if mask.sum() == 0:
+            mask[first] = 1.0  # pathological dropout: keep one device
         return mask
 
     def step(self) -> RoundPlan:

@@ -388,7 +388,7 @@ class ShardedBankCEFedAvg(FLSimulator):
         raise AssertionError(
             "ShardedBankCEFedAvg disables cohort compaction")
 
-    def _lower_flat(self, program):
+    def _lower_flat(self, program, block_keyed: bool = False):
         """Compile a :class:`repro.core.program.RoundProgram` to ONE
         jitted ``shard_map`` global round over the bank shards — the
         sharded lowering of the IR, same operand schedule as the
@@ -410,7 +410,13 @@ class ShardedBankCEFedAvg(FLSimulator):
           single psum + gossip pass at any depth.
 
         Buffers are donated: peak per-device memory stays ~1× the
-        (1, T) bank shard per resident buffer."""
+        (1, T) bank shard per resident buffer.
+
+        ``block_keyed`` is the single-block async-event variant (see
+        ``FLSimulator._lower_flat``): the passed key is consumed
+        directly, and the dense-operator path is forced — staleness-
+        masked operators are arbitrary row-stochastic matrices the
+        structured collectives can't express."""
         fl = self.fl
         n = self.sched.n
         mesh = self.mesh
@@ -424,6 +430,8 @@ class ShardedBankCEFedAvg(FLSimulator):
         plans = prg.lowering_plan(program, fuse=True)
         runs = prg.block_runs(plans)
         nblocks = len(plans)
+        assert not block_keyed or nblocks == 1, \
+            "block_keyed lowers single-block programs"
         adaptive = program.adaptive
         goffs, nmats = [], 0
         for bp, _cnt in runs:
@@ -431,8 +439,10 @@ class ShardedBankCEFedAvg(FLSimulator):
             nmats += len(bp.groups)
         # static ce_fedavg schedule -> structured collectives (registry
         # tier psums + gossip matchings); anything time-varying or
-        # non-gossip -> exact dense operators via weighted rotations
-        structured = self.engine is None and fl.algorithm == "ce_fedavg"
+        # non-gossip — including async staleness-masked operators —
+        # -> exact dense operators via weighted rotations
+        structured = (self.engine is None and fl.algorithm == "ce_fedavg"
+                      and not block_keyed)
         registry = self.registry
         gsize = tuple(registry.tier(lvl).group_size
                       for lvl in range(registry.depth))
@@ -559,7 +569,8 @@ class ShardedBankCEFedAvg(FLSimulator):
                                            mats[goff + j], usize)
                 return Y, M, Rres
 
-            keys = jax.random.split(key, nblocks)
+            keys = (key[None] if block_keyed
+                    else jax.random.split(key, nblocks))
             ki = 0
             for (bp, count), goff in zip(runs, goffs):
                 bkeys = keys[ki:ki + count]

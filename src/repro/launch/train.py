@@ -72,6 +72,14 @@ def main(argv=None):
                     help="named wall-clock scenario (bank engine): device "
                          "heterogeneity / client sampling / mobility — "
                          "adaptive_tau needs a heterogeneous one to bite")
+    ap.add_argument("--async-staleness", type=int, default=-1,
+                    metavar="S",
+                    help="bounded-staleness async rounds (bank engine): "
+                         "each cluster advances to its next block as "
+                         "soon as its own boundary clears, gossiping "
+                         "only with neighbors within S blocks; 0 is the "
+                         "global barrier (identical trajectory), -1 "
+                         "(default) disables async execution")
     ap.add_argument("--hierarchy", default="",
                     help="depth>2 tier preset (bank engine): comma-"
                          "separated branching factors root->leaf, e.g. "
@@ -89,8 +97,10 @@ def main(argv=None):
     ap.add_argument("--process-id", type=int, default=-1)
     args = ap.parse_args(argv)
     if args.engine != "bank" and (args.schedule != "static"
-                                  or args.scenario or args.hierarchy):
-        ap.error("--schedule/--scenario/--hierarchy require --engine bank")
+                                  or args.scenario or args.hierarchy
+                                  or args.async_staleness >= 0):
+        ap.error("--schedule/--scenario/--hierarchy/--async-staleness "
+                 "require --engine bank")
 
     if args.multihost:
         from repro.launch.mesh import initialize_multihost
@@ -162,6 +172,7 @@ def run_bank_engine(args):
     """Drive ``ShardedBankCEFedAvg`` — one bank row per device — on
     synthetic federated classification data, logging loss/accuracy of the
     edge models per global round (the paper's evaluation protocol)."""
+    from repro.core.runtime import compute_bound_runtime_model
     from repro.core.scenario import get_scenario
     from repro.core.sharded import ShardedBankCEFedAvg
     from repro.data.federated import (build_fl_data, dirichlet_partition,
@@ -204,16 +215,27 @@ def run_bank_engine(args):
         lambda k: init_mlp_classifier(k, 16, 32, 8), apply_mlp_classifier,
         fl, data, mesh, lr=args.lr, batch_size=args.batch, seed=0,
         scenario=scenario, schedule=schedule)
+    use_async = args.async_staleness >= 0
     print(f"bank engine: n={n} rows x T={sim.bank.layout.total} "
           f"({sim.bank.layout.row_nbytes} B/row), m={m} clusters, "
           f"mesh={dict(mesh.shape)}, schedule={args.schedule}"
-          + (f", scenario={args.scenario}" if args.scenario else ""))
+          + (f", scenario={args.scenario}" if args.scenario else "")
+          + (f", async_staleness={args.async_staleness}" if use_async
+             else ""))
+    rt = compute_bound_runtime_model() if use_async else None
     for r in range(args.rounds):
         t0 = time.time()
-        sim.step_round()
+        if use_async:
+            sim.step_round_async(args.async_staleness, rt)
+            nev = len(sim.last_async["timeline"]["events"])
+            extra = (f" events={nev} "
+                     f"makespan={sim.last_async['timeline']['makespan']:.1f}s")
+        else:
+            sim.step_round()
+            extra = ""
         acc, loss = sim.evaluate(256)
         print(f"round {r}: acc={acc:.3f} loss={loss:.4f} "
-              f"({time.time()-t0:.1f}s)", flush=True)
+              f"({time.time()-t0:.1f}s){extra}", flush=True)
     if args.ckpt:
         save_checkpoint(args.ckpt, jax.device_get(sim.global_model()),
                         {"engine": "bank", "rounds": args.rounds})

@@ -1,0 +1,356 @@
+"""Async bounded-staleness execution (ISSUE 7): parity, invariants, edges.
+
+The correctness anchor is the s = 0 degeneracy: one async round with
+staleness 0 is a global barrier, so the trajectory must match the
+barrier engines — bitwise against the plain flat bank, and to fp
+tolerance against the cohort-compacted path. For s > 0 the contract is
+the staleness invariant: every realized gossip edge (i, j) in the
+recorded event trace satisfies |phase_i − phase_j| <= s.
+
+Fuzzing: configs are drawn from seeded numpy generators (deterministic
+"fuzz" that needs no extra deps); when ``hypothesis`` is installed an
+extra property-based sweep of the pure timeline/mask layer runs too.
+The sharded-engine parity test is marked ``multidevice`` (in-process,
+needs 8 devices); the CLI end-to-end test spawns a subprocess and is
+marked ``slow`` — matching the lanes in ci.yml.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, ScenarioConfig
+from repro.core import gossip as gsp
+from repro.core import program as prg
+from repro.core.cefedavg import FLSimulator
+from repro.core.runtime import compute_bound_runtime_model
+from repro.core.scenario import get_scenario
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+RT = compute_bound_runtime_model()
+
+
+def _data(fl):
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    return {k: jnp.asarray(v) for k, v in data.items()}
+
+
+def _sim(fl, *, scenario=None, seed=0, lr=0.1):
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, _data(fl), lr=lr, batch_size=16,
+        seed=seed, scenario=scenario)
+
+
+def _maxdiff(a, b):
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+def _fuzz_fl(seed):
+    """Deterministically fuzzed FL geometry/schedule from one seed."""
+    rng = np.random.default_rng(seed)
+    algo = rng.choice(["ce_fedavg", "hier_favg", "dec_local_sgd"])
+    m = int(rng.integers(2, 5))
+    dpc = 1 if algo == "dec_local_sgd" else int(rng.integers(1, 4))
+    if algo == "dec_local_sgd":
+        m = max(m, 3)
+    return FLConfig(algorithm=str(algo), num_clusters=m,
+                    devices_per_cluster=dpc,
+                    tau=int(rng.integers(1, 4)), q=int(rng.integers(1, 4)),
+                    pi=int(rng.integers(2, 8)),
+                    topology=str(rng.choice(["ring", "complete"])))
+
+
+def _check_trace(sim, staleness):
+    """Every realized cross-cluster edge respects the staleness bound,
+    and every event's advancing clusters sit exactly at its block."""
+    trace = sim.last_async["trace"]
+    assert trace, "async round recorded no events"
+    for ev in trace:
+        ph = np.asarray(ev["phases"])
+        assert (ph[list(ev["clusters"])] == ev["block"]).all()
+        for (i, j) in ev["edges"]:
+            assert abs(int(ph[i]) - int(ph[j])) <= staleness, \
+                f"edge ({i},{j}) gap {abs(int(ph[i]) - int(ph[j]))} > " \
+                f"{staleness} at block {ev['block']}"
+
+
+# ---------------------------------------------------------------------------
+# s = 0 degeneracy: async is the barrier, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_s0_parity_flat_fuzzed(seed):
+    """Async s=0 == barrier flat-bank trajectory exactly, across fuzzed
+    geometries/schedules (the correctness anchor)."""
+    fl = _fuzz_fl(seed)
+    sb, sa = _sim(fl, seed=seed), _sim(fl, seed=seed)
+    sb._compact_enabled = False   # plain flat path: bitwise comparable
+    for _ in range(3):
+        sb.step_round()
+        sa.step_round_async(0, RT)
+    assert _maxdiff(sb.bank.params, sa.bank.params) == 0.0
+    assert _maxdiff(sb.bank.mom, sa.bank.mom) == 0.0
+
+
+@pytest.mark.parametrize("sname", ["lognormal", "sampled", "mobility"])
+def test_s0_parity_compact_scenario(sname):
+    """Async s=0 matches the cohort-compacted barrier path to fp
+    tolerance under sampling/mobility scenarios (identical keyed plan
+    draws on both sides)."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    sc = dataclasses.replace(get_scenario(sname), seed=7)
+    sb, sa = _sim(fl, scenario=sc), _sim(fl, scenario=sc)
+    for _ in range(3):
+        sb.step_round()
+        sa.step_round_async(0, RT)
+    assert _maxdiff(sb.bank.params, sa.bank.params) < 2e-4
+    assert _maxdiff(sb.bank.mom, sa.bank.mom) < 2e-4
+
+
+def test_s0_resets_async_carry():
+    """s=0 rounds are pure barriers: no carry survives into a later
+    async round's timeline (its block 0 starts from a common front)."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    sa = _sim(fl)
+    sa.step_round_async(2, RT)
+    sa.step_round_async(0, RT)
+    assert sa._async_carry is None
+
+
+# ---------------------------------------------------------------------------
+# s > 0: staleness invariant on the realized event trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("staleness", [1, 2, 3])
+def test_staleness_invariant_fuzzed(seed, staleness):
+    fl = _fuzz_fl(seed)
+    sc = ScenarioConfig(name="fuzz", speed_dist="lognormal",
+                        speed_spread=0.6, sample_fraction=0.5,
+                        seed=seed)
+    sa = _sim(fl, scenario=sc, seed=seed)
+    for _ in range(3):
+        sa.step_round_async(staleness, RT)
+        _check_trace(sa, staleness)
+
+
+def test_async_round_completes_all_phases():
+    """Every cluster ends the round having cleared every block (the
+    round-serialized executor never strands a cluster mid-phase)."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=3, pi=4,
+                  topology="ring")
+    sa = _sim(fl)
+    nblocks = None
+    for r in range(2):
+        sa.step_round_async(2, RT)
+        nblocks = len(prg.block_programs(sa.last_program))
+    assert (sa.last_async["phases"] == 2 * nblocks).all()
+
+
+def test_async_learns():
+    """Sanity: s=2 async training still converges on the toy task."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    sa = _sim(fl)
+    for _ in range(8):
+        sa.step_round_async(2, RT)
+    acc, loss = sa.evaluate(256)
+    assert np.isfinite(loss) and acc > 0.5
+
+
+# ---------------------------------------------------------------------------
+# edge cases: dropout mid-round, mobility re-draws at differing phases
+# ---------------------------------------------------------------------------
+
+def test_cluster_dropout_mid_block():
+    """A whole cluster sampled out mid-round: its identity rows must
+    keep the operator row-stochastic and the round must still complete
+    every phase (no deadlock, no weight leakage)."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    sc = ScenarioConfig(name="harsh", speed_dist="lognormal",
+                        speed_spread=0.8, sample_fraction=0.25,
+                        dropout_prob=0.4, seed=11)
+    sa = _sim(fl, scenario=sc)
+    saw_dropout = False
+    for _ in range(6):
+        plan = sa.step_round_async(2, RT)
+        _check_trace(sa, 2)
+        mask = np.asarray(plan.mask)
+        labels = np.asarray(plan.labels)
+        for c in range(fl.num_clusters):
+            if mask[labels == c].sum() == 0:
+                saw_dropout = True
+    assert saw_dropout, "scenario never dropped a full cluster; the " \
+                        "edge case was not exercised (tune seed)"
+    assert np.isfinite(float(jnp.abs(sa.bank.params).max()))
+
+
+def test_mobility_redraw_at_differing_phases():
+    """Mobility re-draws B_t between rounds while clusters carry
+    staggered timelines across the round boundary: no staleness
+    violation and no deadlock."""
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    sc = dataclasses.replace(get_scenario("mobile_sampled"), seed=5,
+                             speed_spread=0.6)
+    sa = _sim(fl, scenario=sc)
+    labels_seen = set()
+    for _ in range(6):
+        plan = sa.step_round_async(2, RT)
+        _check_trace(sa, 2)
+        labels_seen.add(tuple(int(c) for c in plan.labels))
+    assert len(labels_seen) > 1, "mobility never re-drew B_t"
+    # staggered carry really crossed round boundaries
+    carry = sa._async_carry
+    assert carry is not None and len(np.unique(carry["T_end"])) > 1
+
+
+def test_upload_programs_rejected():
+    """EF-residual uploads are not staleness-safe; the executor must
+    refuse rather than silently corrupt the residual state."""
+    from repro.core.compress import CompressionConfig
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=2,
+                  devices_per_cluster=2, tau=1, q=1, pi=2,
+                  topology="ring")
+    x, y = make_synthetic_classification(200, 16, 4, seed=3)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, x[:50], y[:50],
+                         samples_per_device=32)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    sim = FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, data, lr=0.1, batch_size=16,
+        compression=CompressionConfig(kind="topk", topk_frac=0.1,
+                                      error_feedback=True))
+    with pytest.raises(AssertionError):
+        sim.step_round_async(1, RT)
+
+
+# ---------------------------------------------------------------------------
+# multidevice lane: the sharded bank engine inherits the executor
+# ---------------------------------------------------------------------------
+
+NDEV = 8
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(
+    jax.device_count() < NDEV,
+    reason=f"needs {NDEV} devices; run under XLA_FLAGS="
+           f"--xla_force_host_platform_device_count={NDEV} "
+           f"(the CI multidevice lane does)")
+@pytest.mark.parametrize("staleness", [0, 2])
+def test_sharded_async_parity(staleness):
+    """The sharded bank engine's async rounds match the single-device
+    flat bank event for event — at s=0 (barrier degeneracy) and at
+    s=2 (staleness-masked operators force the dense-rotation path)."""
+    from repro.core.sharded import ShardedBankCEFedAvg
+    from repro.launch.mesh import make_replica_mesh
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=2, pi=4,
+                  topology="ring")
+    init = lambda k: init_mlp_classifier(k, 16, 32, 4)   # noqa: E731
+    ref = _sim(fl)
+    sb = ShardedBankCEFedAvg(init, apply_mlp_classifier, fl, _data(fl),
+                             make_replica_mesh(NDEV), lr=0.1,
+                             batch_size=16, seed=0)
+    for _ in range(2):
+        ref.step_round_async(staleness, RT)
+        sb.step_round_async(staleness, RT)
+        if staleness:
+            _check_trace(sb, staleness)
+    assert _maxdiff(ref.bank.params, sb.bank.params) < 2e-4
+    assert _maxdiff(ref.bank.mom, sb.bank.mom) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# slow lane: CLI end to end (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_cli_async_staleness_end_to_end():
+    """`train --engine bank --async-staleness 2` runs real async rounds
+    on an 8-device host and reports per-round event counts/makespans."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--engine", "bank",
+         "--data-parallel", "8", "--rounds", "2", "--async-staleness",
+         "2", "--scenario", "lognormal"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "async_staleness=2" in out.stdout
+    assert "events=" in out.stdout and "makespan=" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# property sweep over the pure mask layer (hypothesis-fuzzed when the
+# package is installed; a seeded deterministic sweep always runs)
+# ---------------------------------------------------------------------------
+
+def _mask_property(seed, staleness):
+    """staleness_mask preserves row-stochasticity, never mixes a column
+    whose phase gap exceeds the bound, and pins non-advancing rows to
+    identity — for arbitrary phase vectors and advancing sets."""
+    rng = np.random.default_rng(seed)
+    m, dpc = int(rng.integers(2, 5)), int(rng.integers(1, 4))
+    n = m * dpc
+    labels = np.repeat(np.arange(m), dpc)
+    W = rng.random((n, n)).astype(np.float32)
+    W /= W.sum(1, keepdims=True)
+    phases = rng.integers(0, 4, size=m)
+    adv = rng.random(m) < 0.7
+    if not adv.any():
+        adv[int(rng.integers(m))] = True
+    p = int(phases[adv][0])
+    phases[adv] = p                          # advancing share one phase
+    Wm = gsp.staleness_mask(W, labels, phases, staleness, adv)
+    np.testing.assert_allclose(Wm.sum(1), 1.0, atol=1e-5)
+    gap = np.abs(phases - p)[labels]
+    row_adv = adv[labels]
+    if (gap > staleness).any():
+        # dropped columns belong to non-advancing (out-of-bound)
+        # clusters, so no diagonal entry of an advancing row is in here
+        assert (Wm[np.ix_(row_adv, gap > staleness)] == 0).all()
+    assert (Wm[~row_adv] == np.eye(n, dtype=np.float32)[~row_adv]).all()
+
+
+@pytest.mark.parametrize("staleness", [0, 1, 3])
+@pytest.mark.parametrize("seed", range(8))
+def test_staleness_mask_properties(seed, staleness):
+    _mask_property(seed, staleness)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    pass
+else:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(0, 3))
+    def test_hypothesis_staleness_mask(seed, staleness):
+        _mask_property(seed, staleness)

@@ -10,22 +10,27 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import CHECKS, check, derived_field, main
+from benchmarks.check_regression import (CHECKS, check, derived_field,
+                                         main, newest_baseline)
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-BASELINE = os.path.join(REPO, "BENCH_pr3.json")
+# the guard compares against the NEWEST committed trajectory point —
+# the same default resolution CI uses
+BASELINE = newest_baseline(REPO)
 
 
 def _rec(name, derived):
     return {"name": name, "us_per_call": 1.0, "derived": derived}
 
 
-def _smoke(speedup, ratio):
+def _smoke(speedup, ratio, async_ratio=0.97):
     return [
         _rec("kern_boundary_fused_femnist_cnn_n16",
              f"bank qt-boundary;speedup_vs_perleaf={speedup}x"),
         _rec("kern_compaction_ratio_mlp_smoke",
              f"half/full_round_time={ratio};blurb"),
+        _rec("clock_async_s2_lognormal",
+             f"async/barrier_makespan={async_ratio};rounds=8"),
     ]
 
 
@@ -47,7 +52,7 @@ def test_healthy_smoke_passes(baseline):
 
 def test_lost_fusion_speedup_fails(baseline):
     """Fused boundary degrading to the per-leaf baseline (speedup ~1x
-    while the committed baseline is 3.26x) must fail the floor check."""
+    while the committed baseline is >3x) must fail the floor check."""
     failures, _ = check(_smoke(0.9, 1.39), baseline, 2.5)
     assert failures == ["speedup_vs_perleaf"]
 
@@ -57,6 +62,19 @@ def test_compaction_blowup_fails(baseline):
     recompiles, duplicated gradient work) must fail the ceiling check."""
     failures, _ = check(_smoke(1.85, 3.1), baseline, 2.5)
     assert failures == ["half/full_round_time"]
+
+
+def test_async_slower_than_barrier_fails(baseline):
+    """Async charging MORE than the barrier breaks the wait-rule
+    contract; the cap1 check is tolerance-free (deterministic clock
+    math), so even 1.01 must fail."""
+    failures, _ = check(_smoke(1.85, 1.39, async_ratio=1.01),
+                        baseline, 2.5)
+    assert failures == ["async/barrier_makespan"]
+    # exactly 1.0 (a fleet where staleness buys nothing) is fine
+    failures, _ = check(_smoke(1.85, 1.39, async_ratio=1.0),
+                        baseline, 2.5)
+    assert failures == []
 
 
 def test_missing_record_is_an_error(baseline, tmp_path, capsys):
@@ -76,16 +94,15 @@ def test_newest_baseline_picks_highest_pr_tag(tmp_path):
         newest_baseline(str(tmp_path / "empty"))
 
 
-def test_repo_newest_baseline_is_pr5_and_guards_pass():
-    """The committed trajectory now has >= 2 points and the default
-    baseline resolution lands on the newest; every guarded field
-    resolves in it (candidate record names cover smoke-lane JSONs)."""
+def test_repo_newest_baseline_guards_pass():
+    """The committed trajectory has multiple points and the default
+    baseline resolution lands on the newest; every guarded field —
+    including the async makespan ratio added in PR 7 — resolves in it
+    (candidate record names cover smoke-lane JSONs)."""
     import re
-
-    from benchmarks.check_regression import newest_baseline
     newest = newest_baseline(REPO)
     m = re.search(r"BENCH_pr(\d+)\.json$", os.path.basename(newest))
-    assert m and int(m.group(1)) >= 5, newest
+    assert m and int(m.group(1)) >= 7, newest
     with open(newest) as f:
         records = json.load(f)
     for field, base_names, _, _ in CHECKS:

@@ -118,3 +118,100 @@ def test_benchmark_reproduces_paper_ordering():
         capture_output=True, text=True, env=env, timeout=1200)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "OK: CE-FedAvg reaches the target" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# async bounded-staleness accounting (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def _async_fixture():
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.program import canonical_program
+    from repro.core.runtime import compute_bound_runtime_model
+    from repro.core.scenario import ScenarioEngine, get_scenario
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=2, tau=2, q=3, pi=4,
+                  topology="ring")
+    return (fl, canonical_program(fl), compute_bound_runtime_model(),
+            np, dataclasses, ScenarioEngine, get_scenario)
+
+
+def _realize(fl, rt, ScenarioEngine, get_scenario, dataclasses, np,
+             name, rounds=4):
+    """Realize one preset's rounds ONCE: (speeds, mask, labels) per
+    round, so barrier and async clocks charge identical scenarios."""
+    eng = ScenarioEngine(dataclasses.replace(get_scenario(name), seed=0),
+                         fl)
+    out = []
+    for _ in range(rounds):
+        plan = eng.step()
+        speeds = np.asarray(eng.speed_multipliers,
+                            float) * rt.hw.device_flops
+        out.append((speeds, np.asarray(plan.mask, float),
+                    np.asarray(plan.labels)))
+    return out
+
+
+def test_async_makespan_never_exceeds_barrier_on_every_preset():
+    """Cumulative async wall clock <= cumulative barrier wall clock on
+    EVERY named scenario preset, for every small staleness bound: the
+    wait rule only ever relaxes barrier edges, never adds one."""
+    (fl, prog, rt, np, dataclasses, ScenarioEngine,
+     get_scenario) = _async_fixture()
+    from repro.core.scenario import SCENARIOS
+    for name in sorted(SCENARIOS):
+        rows = _realize(fl, rt, ScenarioEngine, get_scenario,
+                        dataclasses, np, name)
+        for s in (1, 2, 3):
+            cb, ca = EventClock(rt, fl), EventClock(rt, fl)
+            for speeds, mask, labels in rows:
+                cb.charge_program(prog, speeds, mask)
+                ca.charge_program_async(prog, speeds, mask, staleness=s,
+                                        labels=labels)
+            assert ca.now <= cb.now + 1e-6, \
+                f"async s={s} {ca.now:.3f} > barrier {cb.now:.3f} " \
+                f"on preset {name!r}"
+
+
+def test_charge_program_async_equals_barrier_at_s0():
+    """s=0 is the barrier, EXACTLY (float-equal, not approx) — and it
+    clears any staggered carry a previous async round left behind."""
+    (fl, prog, rt, np, dataclasses, ScenarioEngine,
+     get_scenario) = _async_fixture()
+    rows = _realize(fl, rt, ScenarioEngine, get_scenario, dataclasses,
+                    np, "lognormal")
+    cb, ca = EventClock(rt, fl), EventClock(rt, fl)
+    ca.charge_program_async(prog, *rows[0][:2], staleness=2,
+                            labels=rows[0][2])   # leaves a carry
+    ca.now = cb.now = 0.0
+    for speeds, mask, labels in rows:
+        tb = cb.charge_program(prog, speeds, mask)
+        ta = ca.charge_program_async(prog, speeds, mask, staleness=0,
+                                     labels=labels)
+        assert ta == tb
+    assert ca._async_carry is None
+
+
+def test_async_compute_intervals_never_overlap():
+    """On one cluster's timeline, block intervals are disjoint and
+    ordered — within a round and across the carried round boundary."""
+    (fl, prog, rt, np, dataclasses, ScenarioEngine,
+     get_scenario) = _async_fixture()
+    from repro.core.clock import async_program_timeline
+    rows = _realize(fl, rt, ScenarioEngine, get_scenario, dataclasses,
+                    np, "lognormal", rounds=2)
+    carry, prev_end = None, None
+    for speeds, mask, labels in rows:
+        tl = async_program_timeline(rt, fl, prog, speeds, mask, labels,
+                                    staleness=2, carry=carry)
+        T, start = tl["T"], tl["start"]
+        assert (T >= start - 1e-9).all()              # nonneg duration
+        assert (start[:, 1:] >= T[:, :-1] - 1e-9).all()   # in-round order
+        if prev_end is not None:                      # across rounds
+            assert (start[:, 0] >= prev_end - 1e-9).all()
+        carry, prev_end = tl["carry_out"], T[:, -1]
+    # event times in the merged stream are the recorded end times
+    assert tl["makespan"] == float(T[:, -1].max())

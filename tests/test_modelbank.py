@@ -157,14 +157,18 @@ def test_bank_matches_legacy_full_participation(algo):
 def test_bank_matches_legacy_under_lognormal_mobility_sampling():
     """Trajectory equivalence under a non-trivial scenario: lognormal
     speeds + mobility + sampling with dropout (compacted cohorts)."""
+    # 0.5 of each 2-device cluster: the stratified keyed sampler draws
+    # 1 per cluster, so the compacted cohort path engages every round
     sc = ScenarioConfig(speed_dist="lognormal", speed_spread=0.6,
-                        sample_fraction=0.6, dropout_prob=0.2,
+                        sample_fraction=0.5, dropout_prob=0.2,
                         move_prob=0.3, seed=3)
     sb, sl = _sim(_FL, scenario=sc), _sim(_FL, scenario=sc, bank=False)
+    buckets = []
     for _ in range(5):
         sb.step_round()
+        buckets.append(sb.last_bucket)
         sl.step_round()
-    assert sb.last_bucket < sb.bank.n   # compaction actually engaged
+    assert min(buckets) < sb.bank.n   # compaction actually engaged
     _params_close(sb.params, sl.params)
 
 

@@ -222,8 +222,10 @@ def test_fuzz_legacy_vs_flat_masked_mobility(seed):
     this exercises all three single-host lowerings on one trajectory."""
     rng = np.random.default_rng(100 + seed)
     prog = random_program(rng, _FL.n)
+    # 0.5 of each 2-device cluster: the stratified keyed sampler draws
+    # 1 per cluster, so the compacted cohort path engages every round
     sc = ScenarioConfig(speed_dist="lognormal", speed_spread=0.6,
-                        sample_fraction=0.6, dropout_prob=0.2,
+                        sample_fraction=0.5, dropout_prob=0.2,
                         move_prob=0.3, seed=seed)
     sb = _sim(_FL, scenario=sc, schedule=prog)
     sl = _sim(_FL, scenario=sc, schedule=prog, bank=False)

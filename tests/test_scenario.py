@@ -141,6 +141,36 @@ def test_engine_deterministic_across_instances():
         np.testing.assert_array_equal(pa.mask, pb.mask)
 
 
+def test_engine_keyed_draws_survive_interleaved_rng_use():
+    """Regression for the keyed (round, cluster) draw streams: per-round
+    randomness must be a pure function of (seed, round_idx, stream,
+    cluster). Burning arbitrary extra draws on the engine's instance
+    generator between rounds — which the old shared-sequential-stream
+    implementation would have consumed from — must not change a single
+    plan, so barrier and async drivers (which interleave draws very
+    differently) realize identical scenarios."""
+    fl = FLConfig(num_clusters=4, devices_per_cluster=4, topology="ring")
+    sc = SCENARIOS["mobile_sampled"]
+    a, b = ScenarioEngine(sc, fl), ScenarioEngine(sc, fl)
+    for r in range(6):
+        b.rng.random(17 * (r + 1))            # would desync a shared stream
+        pa, pb = a.step(), b.step()
+        np.testing.assert_array_equal(pa.labels, pb.labels)
+        np.testing.assert_array_equal(pa.mask, pb.mask)
+    # round r's draws are replayable from (seed, r) + the B_t state
+    # alone — no need to have realized rounds < r on the same generator
+    ref = ScenarioEngine(sc, fl)
+    for _ in range(3):
+        ref.step()                            # rounds 0..2
+    state_labels = ref.labels.copy()          # B_t entering round 3
+    p3 = ref.step()                           # round 3
+    c = ScenarioEngine(sc, fl)                # fresh generator state
+    c.round_index = 3
+    c.labels = state_labels
+    np.testing.assert_array_equal(c.step().mask, p3.mask)
+    np.testing.assert_array_equal(c.labels, ref.labels)
+
+
 def test_sampling_cardinality_and_dropout():
     fl = FLConfig(num_clusters=4, devices_per_cluster=4, topology="ring")
     eng = ScenarioEngine(ScenarioConfig(sample_fraction=0.5, seed=0), fl)
