@@ -19,6 +19,10 @@ baseline with a generous tolerance:
   (``smoke <= max(1, baseline) * tolerance``), which still catches the
   real failure modes (per-round recompiles, full-n gradient work plus
   the gather).
+- ``faulted/clean_final_acc`` (graceful degradation under the chaos
+  fault preset) must stay within ``tolerance`` of the committed ratio —
+  an engine that crashes or collapses under injected faults fails the
+  bench itself; one that quietly degrades accuracy fails this floor.
 
 Exit code 1 on any regression or missing record; the smoke JSON is also
 uploaded as a workflow artifact for the perf trajectory.
@@ -61,6 +65,13 @@ CHECKS = (
     # pure deterministic clock math, so no host tolerance: hard cap 1.0
     ("async/barrier_makespan", ("clock_async_s2_lognormal",),
      "clock_async_s2_lognormal", "cap1"),
+    # graceful degradation: final accuracy under chaos faults (edge
+    # outages + link loss + straggler timeouts) relative to the
+    # fault-free run of the same config. Training dynamics on the tiny
+    # smoke surrogate are noisier than clock math, so the usual
+    # floor-with-tolerance applies.
+    ("faulted/clean_final_acc", ("faults_chaos_cefedavg",),
+     "faults_chaos_cefedavg", "floor"),
 )
 
 _NUM = r"([-+0-9.eE]+)"

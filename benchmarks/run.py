@@ -386,9 +386,50 @@ def async_clock(full=False, smoke=False):
             f"rounds={rounds};async_s={ca.now:.1f};barrier_s={cb.now:.1f}")
 
 
+def faults(full=False, smoke=False):
+    """Graceful degradation under chaos-level fault injection
+    (docs/FAULT_MODEL.md): CE-FedAvg with edge outages + backhaul link
+    loss + straggler timeouts vs the fault-free run at matched rounds.
+    The ``faulted/clean_final_acc`` ratio is the regression contract —
+    check_regression floors it (faults may slow convergence, not wreck
+    it); the faulted run must also still clear the accuracy target."""
+    import dataclasses
+
+    from repro.core.clock import run_wall_clock
+    from repro.core.scenario import get_faults, get_scenario
+
+    fl = _fl(m=4, dpc=4, tau=2, q=4)
+    rounds = 6 if smoke else ROUNDS
+    rt = paper_runtime(fl)
+    base = dataclasses.replace(get_scenario("lognormal"),
+                               speed_spread=0.6)
+    hists = {}
+    for tag, sc in (("clean", base),
+                    ("chaos", dataclasses.replace(
+                        base, faults=get_faults("chaos")))):
+        data = make_data(fl, full=full, seed=0)
+        sim = make_sim(fl, data, full=full, seed=0, scenario=sc)
+        with Timer() as t:
+            hists[tag] = run_wall_clock(sim, rt, rounds,
+                                        eval_every=rounds)
+        hists[tag]["dt"] = t.dt
+    clean, chaos = hists["clean"], hists["chaos"]
+    ratio = chaos["acc"][-1] / max(clean["acc"][-1], 1e-9)
+    row("faults_chaos_cefedavg", chaos["dt"] * 1e6 / rounds,
+        f"faulted/clean_final_acc={ratio:.4f};"
+        f"faulted_acc={chaos['acc'][-1]:.4f};"
+        f"clean_acc={clean['acc'][-1]:.4f};"
+        f"faulted_wall_s={chaos['wall_time'][-1]:.1f};"
+        f"clean_wall_s={clean['wall_time'][-1]:.1f};rounds={rounds}")
+    if not smoke:
+        assert chaos["acc"][-1] >= TARGET, \
+            f"faulted CE-FedAvg missed target: {chaos['acc'][-1]:.3f}"
+        assert ratio >= 0.85, f"fault degradation too steep: {ratio:.3f}"
+
+
 BENCHES = {"fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
            "fig6": fig6, "tab1": tab1, "kern": kern, "roof": roof,
-           "async": async_clock}
+           "async": async_clock, "faults": faults}
 
 
 def main() -> None:

@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointStructureError, load_checkpoint, save_checkpoint)
+from repro.checkpoint.runckpt import RunCheckpoint  # noqa: F401

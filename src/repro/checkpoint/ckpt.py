@@ -1,17 +1,44 @@
 """Flat-npz pytree checkpointing (no external deps).
 
-Keys encode the tree path; dtypes/shapes round-trip exactly. Good enough
-for single-host experiment drivers; a real deployment would swap in
-tensorstore/orbax behind the same two functions.
+Keys encode the tree path; dtypes/shapes round-trip exactly, including
+the ml_dtypes extension types (bfloat16, float8_*) that a bare
+``np.save``/``np.load`` would mangle into opaque void records — those
+leaves are stored viewed as same-width unsigned ints and viewed back on
+load using a ``__dtypes__`` tag in the archive. Saves are atomic: the
+archive is written to a temp file in the destination directory and
+``os.replace``d into place, so a crash mid-save can never corrupt the
+previous checkpoint. Good enough for single-host experiment drivers; a
+real deployment would swap in tensorstore/orbax behind the same two
+functions.
 """
 from __future__ import annotations
 
 import json
 import os
+import tempfile
 from typing import Any, Dict
 
 import jax
+import ml_dtypes
 import numpy as np
+
+
+class CheckpointStructureError(ValueError):
+    """Raised when a checkpoint's tree paths do not match ``like``'s.
+
+    Carries the offending key sets so drivers can report exactly what
+    drifted between the saved run and the restoring code (a renamed
+    layer, a dropped optimizer slot, ...). Unlike the former bare
+    ``assert``, this survives ``python -O``.
+    """
+
+    def __init__(self, missing, extra):
+        self.missing = tuple(sorted(missing))
+        self.extra = tuple(sorted(extra))
+        super().__init__(
+            "checkpoint structure mismatch: "
+            f"missing from checkpoint: {list(self.missing) or '-'}; "
+            f"unexpected in checkpoint: {list(self.extra) or '-'}")
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
@@ -27,24 +54,67 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
     return out
 
 
+def _encode(flat: Dict[str, np.ndarray]):
+    """(storable arrays, {key: dtype name}) — ml_dtypes leaves (numpy
+    kind 'V') are viewed as same-width unsigned ints for the archive."""
+    stored, tags = {}, {}
+    for k, v in flat.items():
+        if v.dtype.kind == "V":
+            tags[k] = v.dtype.name
+            stored[k] = v.view(f"u{v.dtype.itemsize}")
+        else:
+            stored[k] = v
+    return stored, tags
+
+
+def _decode(arr: np.ndarray, name: str | None) -> np.ndarray:
+    if name is None:
+        return arr
+    return arr.view(np.dtype(getattr(ml_dtypes, name)))
+
+
 def save_checkpoint(path: str, tree: Any, meta: Dict | None = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(tree)
-    np.savez(path, __meta__=json.dumps(meta or {}),
-             **{k: v for k, v in flat.items()})
+    """Atomically write ``tree`` (+ json-able ``meta``) to ``path``.
+
+    The archive lands under exactly ``path`` (no implicit ``.npz``
+    suffix), via a temp file in the same directory and ``os.replace``,
+    so readers always see either the old checkpoint or the new one —
+    never a torn write.
+    """
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    stored, tags = _encode(_flatten(tree))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".ckpt-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta or {}),
+                     __dtypes__=json.dumps(tags), **stored)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def load_checkpoint(path: str, like: Any = None):
     """Returns (tree, meta). If ``like`` is given, reshapes into its
-    structure; otherwise returns the flat {path: array} dict."""
+    structure (raising :class:`CheckpointStructureError` naming the
+    missing/extra tree paths on any mismatch); otherwise returns the
+    flat {path: array} dict. Leaf dtypes are exactly as saved."""
     z = np.load(path, allow_pickle=False)
     meta = json.loads(str(z["__meta__"]))
-    flat = {k: z[k] for k in z.files if k != "__meta__"}
+    tags = (json.loads(str(z["__dtypes__"]))
+            if "__dtypes__" in z.files else {})
+    flat = {k: _decode(z[k], tags.get(k)) for k in z.files
+            if k not in ("__meta__", "__dtypes__")}
     if like is None:
         return flat, meta
     leaves_like, treedef = jax.tree.flatten(like)
     flat_like = _flatten(like)
-    assert set(flat_like) == set(flat), "checkpoint structure mismatch"
+    if set(flat_like) != set(flat):
+        raise CheckpointStructureError(
+            missing=set(flat_like) - set(flat),
+            extra=set(flat) - set(flat_like))
     ordered = [flat[k] for k in sorted(flat_like)]
     # tree.flatten of dicts sorts keys, matching _flatten's ordering
     return jax.tree.unflatten(treedef, ordered), meta

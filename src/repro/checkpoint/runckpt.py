@@ -1,0 +1,194 @@
+"""Whole-run crash-consistent checkpointing: :class:`RunCheckpoint`.
+
+``checkpoint/ckpt.py`` persists a single pytree; a *run* is more than
+its parameters — killing a long wall-clock simulation mid-flight loses
+the RNG key, the scenario cursor (mobility labels + round index), the
+async clock's cross-round timeline carry, the accuracy history and any
+adaptive-schedule state. RunCheckpoint captures ALL of that as one
+fixed-structure tree and writes it through the atomic
+``save_checkpoint`` (temp file + ``os.replace``), so a reader always
+sees either the previous complete checkpoint or the new one.
+
+Restore is *bit-identical*: every per-round draw in the simulator is
+keyed by ``(seed, round, stream, entity)`` (scenario cohorts, mobility,
+faults) or threaded through the saved PRNG key (minibatch/DP noise), so
+a run killed at round k and resumed replays rounds k..R exactly as the
+uninterrupted run would have — parameters AND recorded accuracy
+history (``tests/test_resume.py`` asserts both, barrier and async).
+
+Sharded engines restore without ever materializing the bank on one
+host: the (n, T) buffers go back through
+:meth:`repro.core.modelbank.ModelBank.load_rows`, which fills each
+device's row shard via ``jax.make_array_from_callback`` against the
+bank's resident sharding.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+
+
+def _host(x) -> np.ndarray:
+    """Device array -> host numpy (gathers a sharded array's shards)."""
+    return np.asarray(jax.device_get(x))
+
+
+def _capture(sim, round_idx: int, clock, hist,
+             staleness: Optional[int]) -> Dict[str, Any]:
+    """The full run state as one fixed-structure tree.
+
+    The structure is a function of the sim's *configuration* only
+    (bank vs legacy engine, residual on/off, scenario attached,
+    schedule kind), never of how far the run has progressed — so a
+    freshly constructed sim yields the exact ``like`` tree that
+    ``load_checkpoint`` validates a saved run against. That is why the
+    variable-length pieces are normalized: history columns are stored
+    as single arrays (their length lives in the data, not the tree)
+    and the async clock carry is zero-padded to ``(k, m)`` with an
+    explicit ``ncols`` count (the carry holds fewer than
+    ``max(staleness, 1)`` columns early in a run).
+    """
+    m = sim.fl.num_clusters
+    n = sim.fl.n
+    state: Dict[str, Any] = {
+        "round": np.int64(round_idx),
+        "sim_round": np.int64(sim.round_index),
+        "key": _host(sim.key),
+        "labels": np.asarray(sim.labels, np.int64),
+        "phases": np.asarray(
+            getattr(sim, "_async_phases", np.zeros(m, dtype=int)),
+            np.int64),
+    }
+    if sim.bank is not None:
+        bank = {"params": _host(sim.bank.params),
+                "mom": _host(sim.bank.mom)}
+        if sim.bank.residual is not None:
+            bank["residual"] = _host(sim.bank.residual)
+        state["bank"] = bank
+    else:
+        state["params"] = jax.tree.map(_host, sim._params)
+        state["mom"] = jax.tree.map(_host, sim._mom)
+        if sim._residual is not None:
+            state["residual"] = jax.tree.map(_host, sim._residual)
+    if sim.engine is not None:
+        state["engine"] = {
+            "labels": np.asarray(sim.engine.labels, np.int64),
+            "round": np.int64(sim.engine.round_index)}
+    # adaptive-schedule state under fixed keys regardless of schedule
+    # kind: pi_feedback's EMA anchor and the online speed estimator's
+    # per-device rate EMA (NaN-filled when absent)
+    fn = getattr(sim, "_schedule_fn", None)
+    fb = getattr(fn, "state", None)
+    est = getattr(fn, "estimator", None)
+    state["sched"] = {
+        "ref": np.float64(fb["ref"] if fb is not None else np.nan),
+        "ema": np.float64(fb["ema"] if fb is not None else np.nan),
+        "rate": (np.asarray(est._rate, np.float64) if est is not None
+                 else np.full(n, np.nan))}
+    if clock is not None:
+        k = max(int(staleness or 0), 1)
+        carry = clock._async_carry
+        t_end = np.zeros(m)
+        cols = np.zeros((k, m))
+        ncols = 0
+        if carry is not None:
+            t_end = np.asarray(carry["T_end"], float)
+            live_cols = [np.asarray(c, float) for c in carry["cols"]]
+            ncols = len(live_cols)
+            if ncols:
+                cols[:ncols] = np.stack(live_cols)
+        state["clock"] = {
+            "now": np.float64(clock.now), "T_end": t_end, "cols": cols,
+            "ncols": np.int64(ncols), "live": np.int64(carry is not None)}
+    if hist is not None:
+        state["hist"] = {c: np.asarray(v, np.float64)
+                         for c, v in hist.items()}
+    return state
+
+
+def _assign(sim, state: Dict[str, Any], clock, hist) -> None:
+    """Write a restored state tree back into the live objects."""
+    if sim.bank is not None:
+        b = state["bank"]
+        sim.bank.load_rows(b["params"], b["mom"], b.get("residual"))
+    else:
+        sim._params = jax.tree.map(jnp.asarray, state["params"])
+        sim._mom = jax.tree.map(jnp.asarray, state["mom"])
+        if "residual" in state:
+            sim._residual = jax.tree.map(jnp.asarray, state["residual"])
+    sim.key = jnp.asarray(state["key"])
+    sim.labels = np.asarray(state["labels"], np.int64)
+    sim.round_index = int(state["sim_round"])
+    sim._async_phases = np.asarray(state["phases"], np.int64)
+    if sim.engine is not None:
+        sim.engine.labels = np.asarray(state["engine"]["labels"],
+                                       np.int64)
+        sim.engine.round_index = int(state["engine"]["round"])
+    fn = getattr(sim, "_schedule_fn", None)
+    fb = getattr(fn, "state", None)
+    if fb is not None:
+        fb["ref"] = float(state["sched"]["ref"])
+        fb["ema"] = float(state["sched"]["ema"])
+    est = getattr(fn, "estimator", None)
+    if est is not None:
+        est._rate = np.asarray(state["sched"]["rate"], float)
+    if clock is not None and "clock" in state:
+        ck = state["clock"]
+        clock.now = float(ck["now"])
+        if int(ck["live"]):
+            ncols = int(ck["ncols"])
+            clock._async_carry = {
+                "T_end": np.asarray(ck["T_end"], float),
+                "cols": [np.asarray(ck["cols"][i], float)
+                         for i in range(ncols)]}
+        else:
+            clock._async_carry = None
+    if hist is not None and "hist" in state:
+        for c, col in state["hist"].items():
+            vals = [float(v) for v in np.asarray(col)]
+            if c in ("round", "participants"):
+                vals = [int(v) for v in vals]
+            hist[c][:] = vals
+
+
+class RunCheckpoint:
+    """Atomic single-file run checkpoint under ``<dir>/run.npz``.
+
+    ``save`` captures the sim + clock + history into one tree and
+    writes it crash-consistently; ``restore`` validates the archive
+    against a freshly constructed sim's structure (raising
+    :class:`repro.checkpoint.ckpt.CheckpointStructureError` naming any
+    drifted tree paths) and writes every piece back in place. Returns
+    the checkpoint meta, whose ``"round"`` is the next round to run.
+    """
+
+    FILENAME = "run.npz"
+
+    def __init__(self, dirpath: str):
+        self.dir = str(dirpath)
+        self.path = os.path.join(self.dir, self.FILENAME)
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def save(self, sim, *, round_idx: int, clock=None, hist=None,
+             staleness: Optional[int] = None) -> None:
+        state = _capture(sim, round_idx, clock, hist, staleness)
+        save_checkpoint(self.path, state, meta={
+            "round": int(round_idx),
+            "staleness": (None if staleness is None else int(staleness)),
+            "engine": "bank" if sim.bank is not None else "legacy"})
+
+    def restore(self, sim, *, clock=None, hist=None,
+                staleness: Optional[int] = None) -> Dict[str, Any]:
+        like = _capture(sim, 0, clock, hist, staleness)
+        state, meta = load_checkpoint(self.path, like=like)
+        _assign(sim, state, clock, hist)
+        meta["round"] = int(state["round"])
+        return meta

@@ -232,6 +232,59 @@ SPEED_DISTS = ("homogeneous", "uniform", "lognormal", "bimodal")
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Edge/backhaul fault injection knobs (ISSUE 8).
+
+    Realized per round by ``core.scenario.FaultModel`` with draws keyed
+    by ``(seed, round, stream, entity)`` — the fault trace at round t is
+    a pure function of (config, t), so a killed-and-resumed run replays
+    the identical faults it would have seen uninterrupted.
+
+    Three fault classes, mirroring what a mobile-edge deployment
+    actually loses:
+
+    - **Edge-server outages**: each round, each cluster independently
+      starts an outage window with prob ``outage_prob``; the window
+      lasts 1..``outage_len`` rounds (keyed draw at window start). A
+      dark cluster trains nothing and its rows/columns are gated out of
+      every mixing operator (identity rows, deficit folded onto the
+      diagonal — see ``gossip.fault_gate``).
+    - **Backhaul link loss**: each inter-edge backhaul link
+      independently drops for the round with prob ``link_drop_prob``;
+      the round's gossip runs on the surviving (possibly partitioned)
+      graph, re-weighted per connected component.
+    - **Straggler timeouts**: a participating device whose local-steps
+      compute exceeds ``timeout_factor`` x the cohort-median compute is
+      aborted and retried with an exponentially backed-off budget
+      (``retry_backoff``); after ``max_retries`` failed retries it is
+      dropped from the round's cohort. The aborted-attempt ladder is
+      priced in ``EventClock`` (see ``clock.fault_compute_penalty``).
+    """
+    outage_prob: float = 0.0    # per-cluster per-round window-start prob
+    outage_len: int = 1         # max outage window length (rounds)
+    link_drop_prob: float = 0.0  # per-backhaul-link per-round drop prob
+    timeout_factor: float = 0.0  # x median compute; 0 disables timeouts
+    max_retries: int = 2        # retry attempts before dropping a device
+    retry_backoff: float = 1.5  # budget multiplier per retry attempt
+    seed: int = 0               # fault stream seed (independent of scenario)
+
+    def validate(self) -> None:
+        assert 0.0 <= self.outage_prob < 1.0
+        assert self.outage_len >= 1
+        assert 0.0 <= self.link_drop_prob < 1.0
+        assert self.timeout_factor >= 0.0
+        assert self.max_retries >= 0
+        assert self.retry_backoff >= 1.0
+
+    @property
+    def trivial(self) -> bool:
+        """True iff no fault can ever fire (the parity regime: a
+        fault-gated run must match the ungated run bitwise)."""
+        return (self.outage_prob == 0.0 and self.link_drop_prob == 0.0
+                and self.timeout_factor == 0.0)
+
+
+@dataclass(frozen=True)
 class ScenarioConfig:
     """A wall-clock scenario: who trains each round, how fast, and where.
 
@@ -253,6 +306,8 @@ class ScenarioConfig:
     # -- mobility ------------------------------------------------------------
     move_prob: float = 0.0           # per-device per-round re-association prob
     seed: int = 0
+    # -- fault injection (None = fault-free) ---------------------------------
+    faults: "FaultConfig | None" = None
 
     def validate(self) -> None:
         assert self.speed_dist in SPEED_DISTS, \
@@ -265,6 +320,8 @@ class ScenarioConfig:
         assert 0.0 < self.sample_fraction <= 1.0
         assert 0.0 <= self.dropout_prob < 1.0
         assert 0.0 <= self.move_prob <= 1.0
+        if self.faults is not None:
+            self.faults.validate()
 
     @property
     def trivial(self) -> bool:
@@ -272,7 +329,8 @@ class ScenarioConfig:
         (full participation, no mobility) — the parity regime in which the
         masked schedule must reduce to the static operators."""
         return (self.sample_fraction >= 1.0 and self.dropout_prob == 0.0
-                and self.move_prob == 0.0)
+                and self.move_prob == 0.0
+                and (self.faults is None or self.faults.trivial))
 
 
 # ---------------------------------------------------------------------------

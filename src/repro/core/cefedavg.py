@@ -196,14 +196,18 @@ class FLSimulator:
         # every engine round is a lowering of a RoundProgram; the static
         # τ/q/π knobs compile to the canonical program once, and a
         # schedule hook may swap in a different program each round
+        faulted = (self.engine is not None
+                   and self.engine.faults is not None)
         self._canonical = prg.canonical_program(
-            fl, privatize=dp is not None, compress=compression is not None)
+            fl, privatize=dp is not None, compress=compression is not None,
+            faults=faulted)
         if schedule is None:
             self._schedule_fn: Optional[prg.ScheduleFn] = None
         elif isinstance(schedule, str):
             self._schedule_fn = prg.make_schedule(
                 schedule, fl, engine=self.engine,
-                privatize=dp is not None, compress=compression is not None)
+                privatize=dp is not None, compress=compression is not None,
+                faults=faulted, sim=self)
         elif isinstance(schedule, prg.RoundProgram):
             def _fixed(r, plan, _program=schedule):
                 return _program
@@ -627,13 +631,16 @@ class FLSimulator:
         """Canonical-program compacted round (kept for tests)."""
         return self._get_round("compact", self._canonical)
 
-    def _scenario_h(self):
+    def _scenario_h(self, plan=None):
+        if plan is not None and plan.H_eff is not None:
+            return plan.H_eff  # link-loss-degraded backhaul (FaultModel)
         return self.engine.H if self.engine is not None else self.sched.H
 
     def _inter_operator(self, pi: int, plan, renorm: bool) -> np.ndarray:
         """The (n, n) inter-cluster operator at gossip depth ``pi`` for
         this round — the static schedule's W_inter when possible, else
-        the (masked) time-varying eq. 11 form at the requested depth."""
+        the (masked) time-varying eq. 11 form at the requested depth,
+        built over the plan's surviving backhaul under link faults."""
         from repro.core.scenario import make_masked_w
         if plan is None:
             W = self._inter_static.get(pi)
@@ -647,9 +654,9 @@ class FLSimulator:
             if pi == self.fl.pi:
                 return plan.W_inter
             return make_masked_w(self.fl, plan.labels, plan.mask,
-                                 self._scenario_h(), pi=pi)[1]
+                                 self._scenario_h(plan), pi=pi)[1]
         return make_masked_w(self.fl, plan.labels,
-                             np.ones(self.sched.n), self._scenario_h(),
+                             np.ones(self.sched.n), self._scenario_h(plan),
                              pi=pi)[1]
 
     def _tier_operator(self, op: prg.TierMix, plan, renorm: bool):
@@ -675,7 +682,7 @@ class FLSimulator:
             from repro.core.scenario import make_masked_w
             return make_masked_w(self.fl, plan.labels,
                                  np.ones(self.sched.n),
-                                 self._scenario_h())[0]
+                                 self._scenario_h(plan))[0]
         if op.level == 1:
             return self._inter_operator(op.pi, plan, renorm)
         ck = ("H", op.level)
@@ -698,6 +705,22 @@ class FLSimulator:
         return topo.masked_inter_operator(
             B, H_l, op.pi, plan.mask if renorm else None)
 
+    def _fault_gate(self, program: prg.RoundProgram, plan):
+        """Per-op operator gate for the plan's realized faults: under a
+        ``FaultGate`` directive with dark clusters, every resolved
+        operator gets :func:`repro.core.gossip.fault_gate` applied
+        *before* any fusion — gate(A)·gate(B) is what both the fused
+        and unfused lowerings execute, keeping engine parity under
+        faults. Identity otherwise."""
+        if (program.fault_gate and plan is not None
+                and plan.fault is not None
+                and plan.fault.cluster_down.any()):
+            from repro.core import gossip as gsp
+            down = plan.fault.cluster_down
+            labels = plan.labels
+            return lambda W: gsp.fault_gate(W, labels, down)
+        return lambda W: W
+
     def _resolve_args(self, program: prg.RoundProgram, plan,
                       fuse: bool) -> prg.RoundArgs:
         """Concrete runtime operands (mixing matrices + adaptive step
@@ -716,17 +739,19 @@ class FLSimulator:
                         op, None, renorm)))
                 self._static_mats[ck] = mats
         else:
+            gate = self._fault_gate(program, plan)
             if renorm:
                 W_intra = plan.W_intra
             else:
                 from repro.core.scenario import make_masked_w
                 W_intra = make_masked_w(self.fl, plan.labels,
                                         np.ones(self.sched.n),
-                                        self._scenario_h())[0]
+                                        self._scenario_h(plan))[0]
             mats = tuple(jnp.asarray(m) for m in prg.resolve_matrices(
-                plans, W_intra,
-                lambda pi: self._inter_operator(pi, plan, renorm),
-                tier_of=lambda op: self._tier_operator(op, plan, renorm)))
+                plans, gate(W_intra),
+                lambda pi: gate(self._inter_operator(pi, plan, renorm)),
+                tier_of=lambda op: gate(
+                    self._tier_operator(op, plan, renorm))))
         tau_dev = (jnp.asarray(program.tau_dev, jnp.int32)
                    if program.adaptive else None)
         return prg.RoundArgs(mats, tau_dev)
@@ -770,7 +795,10 @@ class FLSimulator:
         b = self.bank
         args = self._resolve_args(program, plan, fuse=True)
         k_active = b.n if mask_np is None else int(mask_np.sum())
-        if (not program.has_upload and k_active < b.n
+        # 0 < k_active: a fully-dark fault round (empty cohort) cannot
+        # compact — it runs the flat path, where the zero mask freezes
+        # training and the fault-gated operators are the identity
+        if (not program.has_upload and 0 < k_active < b.n
                 and self._compact_enabled):
             cp = compact_plan(mask_np, self._buckets)
             self.last_bucket = cp.k_pad

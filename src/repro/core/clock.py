@@ -106,6 +106,45 @@ def program_device_times(rt: RuntimeModel, program: "prg.RoundProgram",
             * rt.wl.flops_per_step / np.asarray(speeds, float))
 
 
+def fault_compute_penalty(rt: RuntimeModel, program: "prg.RoundProgram",
+                          fc, fault, speeds: Optional[np.ndarray] = None,
+                          mask: Optional[np.ndarray] = None) -> float:
+    """Extra compute seconds the straggler-timeout retry ladder costs a
+    round beyond its max-over-survivors charge.
+
+    ``fault`` is the round's realized ``scenario.FaultPlan`` and ``fc``
+    the ``config.FaultConfig`` that produced it. A device that needed
+    ``a`` aborted attempts waited through budgets
+    ``timeout_factor · retry_backoff^i · t_ref`` for i < a (t_ref being
+    the cohort-median device's compute this round), then — if it
+    survived — ran its own compute; a dropped device pays only the
+    exhausted ladder. The penalty is how far the slowest such ladder
+    extends past the surviving cohort's ordinary max-over-participants
+    charge; 0.0 when no attempt was aborted (the fault-free bitwise
+    anchor)."""
+    if fault is None or fc is None or not (fault.attempts > 0).any():
+        return 0.0
+    C = rt.wl.flops_per_step
+    n = len(fault.attempts)
+    c = (np.asarray(speeds, float) if speeds is not None
+         else np.full(n, rt.hw.device_flops))
+    steps = program_device_steps(program, n)
+    ladder = np.asarray(fault.attempts, float)
+    hit = ladder > 0
+    # the budget basis: the cohort-median device's round compute
+    t_ref = (float(np.median(steps[hit])) * C
+             / (float(fault.ref_mult) * rt.hw.device_flops))
+    geo = np.array([
+        sum(fc.timeout_factor * fc.retry_backoff ** i
+            for i in range(int(a))) for a in fault.attempts[hit]])
+    own = np.where(fault.timed_out[hit], 0.0, steps[hit] * C / c[hit])
+    worst = float(np.max(geo * t_ref + own))
+    # compare against what charge_program already charged: the ordinary
+    # max-over-participants compute of this round's surviving cohort
+    base = program_compute_time(rt, program, speeds, mask)
+    return max(0.0, worst - base)
+
+
 def program_comm_time(rt: RuntimeModel, algorithm: str,
                       program: "prg.RoundProgram",
                       uplink_ratio: float = 1.0) -> float:
@@ -405,7 +444,10 @@ class EventClock:
 def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
                    eval_every: int = 1, eval_batch: int = 512,
                    uplink_ratio: float = 1.0,
-                   async_staleness: Optional[int] = None
+                   async_staleness: Optional[int] = None,
+                   ckpt_dir: Optional[str] = None,
+                   ckpt_every: int = 0,
+                   resume: bool = False
                    ) -> Dict[str, List[float]]:
     """Drive ``sim`` (an FLSimulator) for ``rounds`` global rounds under
     the event clock, returning a history dict with ``round``,
@@ -428,13 +470,35 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
     advance, staleness-masked boundaries) and are charged the overlapped
     timeline's makespan via :meth:`EventClock.charge_program_async`.
     ``async_staleness=0`` reproduces the barrier loop exactly.
+
+    ``ckpt_dir`` + ``ckpt_every`` make the loop crash-consistent: every
+    k-th round the FULL run state (engine buffers, RNG key, scenario
+    cursor, async carries, clock, schedule state, this history) is
+    written atomically by :class:`repro.checkpoint.runckpt.RunCheckpoint`;
+    ``resume=True`` restores the latest checkpoint (if any) and
+    continues from its round — bit-identically to the uninterrupted
+    run, since every per-round draw is keyed (``tests/test_resume.py``).
+
+    With a fault-injecting scenario attached, each round additionally
+    charges the straggler-timeout retry ladder
+    (:func:`fault_compute_penalty`); outage/link-loss degradation is
+    already inside the plan's operators and cohort.
     """
     clock = EventClock(rt, sim.fl)
     hist: Dict[str, List[float]] = {
         "round": [], "wall_time": [], "acc": [], "loss": [],
         "participants": [], "sim_s": []}
+    rc = None
+    start_round = 0
+    if ckpt_dir is not None:
+        from repro.checkpoint.runckpt import RunCheckpoint
+        rc = RunCheckpoint(ckpt_dir)
+        if resume and rc.exists():
+            meta = rc.restore(sim, clock=clock, hist=hist,
+                              staleness=async_staleness)
+            start_round = int(meta["round"])
     window_t0 = time.perf_counter()
-    for r in range(rounds):
+    for r in range(start_round, rounds):
         if async_staleness is None:
             plan = sim.step_round()
         else:
@@ -464,6 +528,16 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
             speeds = (None if fleet is None
                       else fleet[np.asarray(plan.mask) > 0])
             t = clock.charge_round(speeds, uplink_ratio)
+        # straggler faults: price the retry ladder of timed-out devices
+        # on top of the cohort's compute charge
+        fault = getattr(plan, "fault", None)
+        if program is not None and fault is not None:
+            fc = sim.engine.sc.faults
+            pen = fault_compute_penalty(rt, program, fc, fault,
+                                        speeds=fleet, mask=plan.mask)
+            if pen > 0.0:
+                clock.now += pen
+                t = clock.now
         # online-schedule feedback: report the realized per-device step
         # counts and compute seconds this round to the schedule's
         # estimator (the "adaptive_tau_online" loop)
@@ -486,6 +560,9 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
             hist["participants"].append(participants)
             hist["sim_s"].append(sim_s)
             window_t0 = time.perf_counter()
+        if rc is not None and ckpt_every and (r + 1) % ckpt_every == 0:
+            rc.save(sim, round_idx=r + 1, clock=clock, hist=hist,
+                    staleness=async_staleness)
     return hist
 
 

@@ -76,6 +76,31 @@ def staleness_mask(W: np.ndarray, labels: np.ndarray, phases: np.ndarray,
     return Wm
 
 
+def fault_gate(W: np.ndarray, labels: np.ndarray,
+               cluster_down: np.ndarray) -> np.ndarray:
+    """Gate a dense (n, n) mixing operator for edge-server outages.
+
+    ``cluster_down`` marks clusters whose edge server is dark this
+    round (``FaultModel.outage windows``): their device rows become the
+    identity (the cluster's models are frozen until it recovers) and
+    every surviving row drops the dark clusters' columns, folding the
+    removed mass onto its diagonal — exactly the
+    :func:`staleness_mask` construction with the dark clusters pushed
+    out of the staleness bound, so the result is row-stochastic by the
+    same argument. With no cluster down the operator is returned
+    unchanged, bit for bit (the fault-free parity anchor).
+
+    Recovery needs no special casing: a cluster that comes back simply
+    stops being gated and rejoins the next boundary (in async mode,
+    through the existing staleness-bounded catch-up path)."""
+    down = np.asarray(cluster_down, bool)
+    if not down.any():
+        return np.asarray(W, np.float32)
+    phases = np.where(down, -1, 0)
+    return staleness_mask(W, labels, phases, staleness=0,
+                          advancing=~down)
+
+
 def color_edges(adj: np.ndarray) -> List[Dict[int, int]]:
     """Partition the directed edge set into partial matchings.
 

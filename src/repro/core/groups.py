@@ -126,6 +126,18 @@ class GroupRegistry:
         return gsp.staleness_mask(self.operator(level, pi), labels,
                                   phases, staleness, advancing)
 
+    def faulted_operator(self, level: int, pi: int, cluster_down):
+        """Dense ``TierMix(level, pi)`` operator degraded for an
+        edge-outage round: dark clusters become identity rows and are
+        dropped from surviving rows' reads, the deficit folded onto the
+        diagonal (see :func:`repro.core.gossip.fault_gate`) — the tiered
+        form of the per-op gating the plan-level ``FaultGate`` applies.
+        Bitwise equal to :meth:`operator` when nothing is down."""
+        labels = np.repeat(np.arange(self.fl.num_clusters),
+                           self.fl.devices_per_cluster)
+        return gsp.fault_gate(self.operator(level, pi), labels,
+                              cluster_down)
+
     def gossip_schedule(self, level: int, pi: int,
                         mode: str = "rounds") -> gsp.GossipSchedule:
         """The tier's sparse ppermute plan: H_ℓ edge-colored into

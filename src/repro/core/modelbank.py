@@ -95,6 +95,26 @@ class ModelBank:
                          if with_residual else None)
         return self
 
+    def load_rows(self, params: np.ndarray, mom: np.ndarray,
+                  residual=None) -> None:
+        """Overwrite the resident (n, T) buffers from host arrays via
+        per-shard placement: each device fills only its own row slice
+        through ``jax.make_array_from_callback`` against the CURRENT
+        buffer shardings, so a sharded bank restore
+        (``RunCheckpoint``) never materializes the full bank on one
+        device — the restore-side mirror of :meth:`from_model_sharded`.
+        ``residual`` is required iff the bank carries one."""
+        def put(host, like):
+            a = np.asarray(host, np.float32)
+            assert a.shape == like.shape, (a.shape, like.shape)
+            return jax.make_array_from_callback(
+                a.shape, like.sharding, lambda idx: a[idx])
+        self.params = put(params, self.params)
+        self.mom = put(mom, self.mom)
+        if self.residual is not None:
+            assert residual is not None, "bank carries an EF residual"
+            self.residual = put(residual, self.residual)
+
     # -- placement -----------------------------------------------------------
     def place(self, sharding) -> None:
         """Re-place the resident buffers onto ``sharding`` — e.g. the

@@ -48,8 +48,8 @@ truth that keeps compiler and caller in lockstep.
 from __future__ import annotations
 
 import dataclasses
-from typing import (Callable, List, NamedTuple, Optional, Sequence, Tuple,
-                    Union)
+from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -135,8 +135,20 @@ class MaskRenorm:
     over the participation mask (``scenario.make_masked_w``)."""
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultGate:
+    """Plan-level directive: gate this round's operators for the plan's
+    realized faults (``gossip.fault_gate``) — dark clusters' device
+    rows become the identity and their columns' mass folds onto each
+    surviving row's diagonal, so every resolved operator stays
+    row-stochastic under edge-server outages. Applied per *op* operator
+    before any fusion, so fused and unfused lowerings stay in bitwise
+    parity. A no-op on fault-free rounds (and in engines without a
+    fault model)."""
+
+
 MixOp = TierMix
-Op = Union[LocalSteps, TierMix, Compress, Privatize, MaskRenorm]
+Op = Union[LocalSteps, TierMix, Compress, Privatize, MaskRenorm, FaultGate]
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +196,12 @@ class RoundProgram:
     @property
     def mask_renorm(self) -> bool:
         return any(isinstance(o, MaskRenorm) for o in self.ops)
+
+    @property
+    def fault_gate(self) -> bool:
+        """True when the program asks for per-round fault gating of its
+        operators (see :class:`FaultGate`)."""
+        return any(isinstance(o, FaultGate) for o in self.ops)
 
     @property
     def has_upload(self) -> bool:
@@ -254,6 +272,8 @@ def block_programs(program: RoundProgram) -> Tuple[RoundProgram, ...]:
     distinct block."""
     prefix: Tuple[Op, ...] = ((MaskRenorm(),) if program.mask_renorm
                               else ())
+    if program.fault_gate:
+        prefix = prefix + (FaultGate(),)
     out: List[RoundProgram] = []
     for b in program.blocks():
         ops: List[Op] = [b.local]
@@ -275,7 +295,7 @@ def _parse_blocks(ops: Sequence[Op]) -> Tuple[Block, ...]:
     i, N = 0, len(ops)
     while i < N:
         op = ops[i]
-        if isinstance(op, MaskRenorm):
+        if isinstance(op, (MaskRenorm, FaultGate)):
             i += 1
             continue
         if not isinstance(op, LocalSteps):
@@ -308,20 +328,25 @@ def _parse_blocks(ops: Sequence[Op]) -> Tuple[Block, ...]:
 # ---------------------------------------------------------------------------
 
 def canonical_program(fl: FLConfig, *, privatize: bool = False,
-                      compress: bool = False) -> RoundProgram:
+                      compress: bool = False,
+                      faults: bool = False) -> RoundProgram:
     """The static schedule of Algorithm 1 as a program: q blocks of
     (τ local steps → [Privatize → Compress →] IntraMix), the last block
     also closed by ``InterGossip(fl.pi)`` — exactly the boundary
     placement of eq. 11, so lowering this program reproduces the
     pre-IR engines' trajectories. A depth-L ``fl.hierarchy`` appends one
     ``TierMix(ℓ, fl.pi)`` per deeper tier to the final boundary
-    (:func:`hierarchical_program` with default repeats)."""
-    return hierarchical_program(fl, privatize=privatize, compress=compress)
+    (:func:`hierarchical_program` with default repeats). ``faults``
+    prepends a :class:`FaultGate` directive (fault-injecting
+    scenarios)."""
+    return hierarchical_program(fl, privatize=privatize, compress=compress,
+                                faults=faults)
 
 
 def hierarchical_program(fl: FLConfig, qs=None, pis=None, *,
                          privatize: bool = False,
-                         compress: bool = False) -> RoundProgram:
+                         compress: bool = False,
+                         faults: bool = False) -> RoundProgram:
     """The canonical schedule generalized to a depth-L hierarchy.
 
     The tier-ℓ superblock is ``qs[ℓ-1]`` repetitions of the tier-(ℓ-1)
@@ -349,7 +374,10 @@ def hierarchical_program(fl: FLConfig, qs=None, pis=None, *,
             rep.extend(unit)
         rep.append(TierMix(lvl, pis[lvl - 1]))
         unit = rep
-    return RoundProgram(tuple([MaskRenorm()] + unit))
+    prefix: List[Op] = [MaskRenorm()]
+    if faults:
+        prefix.append(FaultGate())
+    return RoundProgram(tuple(prefix + unit))
 
 
 # ---------------------------------------------------------------------------
@@ -466,7 +494,27 @@ class RoundArgs(NamedTuple):
 #: (mobility/sampling) for that round; returns the program to execute.
 ScheduleFn = Callable[[int, Optional[object]], RoundProgram]
 
-SCHEDULES = ("static", "adaptive_tau", "pi_decay", "adaptive_tau_online")
+SCHEDULES = ("static", "adaptive_tau", "pi_decay", "adaptive_tau_online",
+             "pi_feedback")
+
+
+def edge_disagreement(sim) -> float:
+    """Mean pairwise L2 distance between the current edge (cluster)
+    models of a simulator — the observable the ``pi_feedback`` schedule
+    adapts gossip depth from. 0.0 when fewer than two clusters."""
+    import jax
+    em = sim.edge_models()
+    leaves = jax.tree.leaves(em)
+    X = np.concatenate(
+        [np.asarray(jax.device_get(l)).reshape(l.shape[0], -1)
+         for l in leaves], axis=1)
+    m = X.shape[0]
+    if m < 2:
+        return 0.0
+    diffs = X[:, None, :] - X[None, :, :]
+    d = np.sqrt((diffs * diffs).sum(-1))
+    iu = np.triu_indices(m, 1)
+    return float(d[iu].mean())
 
 
 class OnlineSpeedEstimator:
@@ -539,8 +587,10 @@ def adaptive_tau_map(tau: int, labels: np.ndarray, mask: np.ndarray,
 def make_schedule(name: str, fl: FLConfig, *, engine=None,
                   speeds: Optional[np.ndarray] = None,
                   privatize: bool = False, compress: bool = False,
+                  faults: bool = False, sim=None,
                   tau_floor: int = 1, decay_round: int = 5,
                   pi_late: Optional[int] = None,
+                  pi_floor: int = 1,
                   ema_beta: float = 0.5) -> ScheduleFn:
     """Build a named :data:`ScheduleFn`.
 
@@ -561,12 +611,24 @@ def make_schedule(name: str, fl: FLConfig, *, engine=None,
       arrive the cutoffs converge to the oracle schedule's. The
       estimator is exposed as ``schedule_fn.estimator`` so the wall
       clock driver can feed it.
+    - ``pi_feedback``: time-varying π_t driven by *observed* edge-model
+      disagreement (:func:`edge_disagreement` of the attached ``sim``,
+      EMA-smoothed): π_t = clip(ceil(π · D_t/D_1), pi_floor, π), so
+      gossip depth decays exactly as fast as the edge models actually
+      agree — the closed-loop counterpart of ``pi_decay``'s open-loop
+      round threshold. Round 0 (no observation yet) runs the full π;
+      ``schedule_fn.state`` holds the EMA/reference (checkpointed by
+      ``RunCheckpoint``), ``schedule_fn.pi_trace`` the realized depths.
+
+    ``faults=True`` compiles every produced program with the
+    :class:`FaultGate` plan-level directive (fault-injecting
+    scenarios).
     """
     if name not in SCHEDULES:
         raise ValueError(
             f"unknown schedule {name!r}; choose from {SCHEDULES}")
     canonical = canonical_program(fl, privatize=privatize,
-                                  compress=compress)
+                                  compress=compress, faults=faults)
     if name == "static":
         return lambda r, plan: canonical
 
@@ -608,6 +670,41 @@ def make_schedule(name: str, fl: FLConfig, *, engine=None,
                 tau_floor))
         online.estimator = est
         return online
+
+    if name == "pi_feedback":
+        at_pi: Dict[int, RoundProgram] = {fl.pi: canonical}
+
+        def _program_at(pi: int) -> RoundProgram:
+            if pi not in at_pi:
+                at_pi[pi] = RoundProgram(tuple(
+                    InterGossip(pi) if isinstance(o, InterGossip) else o
+                    for o in canonical.ops))
+            return at_pi[pi]
+
+        state = {"ref": np.nan, "ema": np.nan}
+
+        def feedback(r, plan):
+            if sim is None or r == 0:
+                return canonical
+            d = edge_disagreement(sim)
+            if not np.isfinite(state["ema"]):
+                state["ema"] = d
+            else:
+                state["ema"] = ((1.0 - ema_beta) * state["ema"]
+                                + ema_beta * d)
+            if not np.isfinite(state["ref"]) or state["ref"] <= 0.0:
+                # first observation anchors the reference disagreement
+                state["ref"] = state["ema"]
+                feedback.pi_trace.append(fl.pi)
+                return canonical
+            frac = min(1.0, state["ema"] / state["ref"])
+            pi_r = int(np.clip(int(np.ceil(fl.pi * frac)),
+                               pi_floor, fl.pi))
+            feedback.pi_trace.append(pi_r)
+            return _program_at(pi_r)
+        feedback.state = state
+        feedback.pi_trace = []
+        return feedback
 
     lo_pi = max(1, fl.pi // 5) if pi_late is None else pi_late
     late = RoundProgram(tuple(

@@ -25,6 +25,14 @@ charges the plan's cohort for wall time. When the scenario is trivial
 (full participation, no mobility) every plan reproduces the static
 ``make_w_schedule`` operators exactly — the parity regime asserted in
 ``tests/test_scenario.py``.
+
+A :class:`FaultModel` (ISSUE 8) optionally layers *infrastructure*
+faults on top: edge-server outage windows, backhaul link loss and
+straggler timeouts, all realized from draws keyed by
+``(fault seed, round, stream, entity)`` so the fault trace is a pure
+function of the config and the round index — a killed-and-resumed run
+replays the identical faults it would have seen uninterrupted
+(``tests/test_scenario.py::test_fault_trace_*``).
 """
 from __future__ import annotations
 
@@ -33,7 +41,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.config import FLConfig, ScenarioConfig
+from repro.config import FaultConfig, FLConfig, ScenarioConfig
 from repro.core import topology as topo
 
 
@@ -58,15 +66,60 @@ def sample_speed_multipliers(sc: ScenarioConfig, n: int,
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One round's realized faults (see :class:`FaultModel`).
+
+    ``cluster_down`` marks clusters whose edge server is dark this
+    round; ``link_up`` is the symmetric keep-mask over the backhaul
+    adjacency (``n_components`` counts the surviving graph's connected
+    components — >1 means this round gossips per partition);
+    ``attempts``/``timed_out`` record the straggler-timeout retry
+    ladder (aborted attempts per device, and which devices were
+    dropped after exhausting retries) with ``ref_mult`` the
+    cohort-median speed multiplier their budgets were derived from."""
+    round_index: int
+    cluster_down: np.ndarray   # (m,) bool — edge server dark this round
+    link_up: np.ndarray        # (m,m) bool — surviving backhaul links
+    n_components: int          # components of the surviving graph
+    attempts: np.ndarray       # (n,) int — aborted timeout attempts
+    timed_out: np.ndarray      # (n,) bool — dropped after max_retries
+    ref_mult: float            # cohort-median speed mult (budget basis)
+
+    @property
+    def any(self) -> bool:
+        """True iff any fault fired this round."""
+        return bool(self.cluster_down.any() or (~self.link_up).any()
+                    or self.timed_out.any() or (self.attempts > 0).any())
+
+    def trace(self) -> Tuple:
+        """Hashable summary of the realized faults — what the replay
+        determinism tests compare between a straight-through run and a
+        killed-and-resumed one."""
+        return (int(self.round_index),
+                tuple(np.nonzero(self.cluster_down)[0].tolist()),
+                tuple(map(tuple, np.argwhere(~self.link_up).tolist())),
+                int(self.n_components),
+                tuple(self.attempts.tolist()),
+                tuple(np.nonzero(self.timed_out)[0].tolist()))
+
+
+@dataclasses.dataclass(frozen=True)
 class RoundPlan:
     """One global round's realized scenario: who participates, where each
-    device lives, and the mixing operators those two facts induce."""
+    device lives, and the mixing operators those two facts induce.
+
+    Under fault injection ``fault`` carries the round's
+    :class:`FaultPlan` (``None`` on fault-free rounds) and ``H_eff``
+    the link-loss-degraded mixing matrix the operators were built from
+    (``None`` when every backhaul link survived)."""
     round_index: int
     num_clusters: int         # m
     labels: np.ndarray        # (n,) cluster id per device (B_t rows)
     mask: np.ndarray          # (n,) float 0/1 participation
     W_intra: np.ndarray       # (n,n) masked/unequal intra-cluster operator
     W_inter: np.ndarray       # (n,n) masked/unequal inter-cluster operator
+    fault: Optional[FaultPlan] = None
+    H_eff: Optional[np.ndarray] = None  # (m,m) degraded mixing matrix
 
     @property
     def active(self) -> np.ndarray:
@@ -118,6 +171,138 @@ def make_masked_w(fl: FLConfig, labels: np.ndarray, mask: np.ndarray,
     raise ValueError(fl.algorithm)
 
 
+class FaultModel:
+    """Keyed per-round fault realization of a
+    :class:`repro.config.FaultConfig`.
+
+    Stateless by construction: every draw reads a counter-based
+    generator keyed by ``(fault seed, round, stream, entity)``, and an
+    outage window active at round t is *recomputed* from the window
+    starts of the last ``outage_len`` rounds rather than carried as
+    state — so ``realize(t, ...)`` is a pure function of (config, t,
+    cohort) and a resumed run replays the identical fault trace.
+
+    >>> import numpy as np
+    >>> from repro.config import FaultConfig, FLConfig
+    >>> fm = FaultModel(FaultConfig(outage_prob=0.3, outage_len=2,
+    ...                             link_drop_prob=0.2, seed=7),
+    ...                 FLConfig(num_clusters=4, devices_per_cluster=2))
+    >>> plan = fm.realize(3, np.ones(8), np.ones(8),
+    ...                   np.repeat(np.arange(4), 2))
+    >>> plan.trace() == fm.realize(3, np.ones(8), np.ones(8),
+    ...                            np.repeat(np.arange(4), 2)).trace()
+    True
+    """
+
+    #: stream tags (disjoint from ScenarioEngine's so a shared seed
+    #: still yields independent draws)
+    _STREAM_OUTAGE = 11
+    _STREAM_OUTAGE_LEN = 12
+    _STREAM_LINK = 13
+
+    def __init__(self, fc: FaultConfig, fl: FLConfig,
+                 adj: Optional[np.ndarray] = None):
+        fc.validate()
+        self.fc, self.fl = fc, fl
+        if adj is None:
+            hier = topo.Hierarchy.from_config(fl)
+            adj = hier.adjacency(1, fl.topology, fl)
+        self.adj = np.asarray(adj, bool)
+
+    def _rng(self, round_idx: int, stream: int,
+             entity: int = 0) -> np.random.Generator:
+        """Counter-based generator keyed by
+        ``(fault seed, round, stream, entity)`` — same keying
+        discipline as ``ScenarioEngine._round_rng``."""
+        return np.random.default_rng(np.random.SeedSequence(
+            [int(self.fc.seed), int(round_idx), int(stream), int(entity)]))
+
+    def cluster_down(self, round_idx: int) -> np.ndarray:
+        """(m,) bool: clusters inside an outage window at ``round_idx``.
+
+        A window starting at round s (prob ``outage_prob``, keyed by
+        (s, cluster)) lasts 1..``outage_len`` rounds (length keyed by
+        the same s) — so membership at t only needs the keyed draws of
+        rounds t-outage_len+1..t, never any carried state."""
+        m = self.fl.num_clusters
+        down = np.zeros(m, bool)
+        if self.fc.outage_prob <= 0.0:
+            return down
+        for c in range(m):
+            for s in range(max(0, round_idx - self.fc.outage_len + 1),
+                           round_idx + 1):
+                if self._rng(s, self._STREAM_OUTAGE, c).random() \
+                        < self.fc.outage_prob:
+                    length = int(self._rng(s, self._STREAM_OUTAGE_LEN, c)
+                                 .integers(1, self.fc.outage_len + 1))
+                    if s + length > round_idx:
+                        down[c] = True
+                        break
+        return down
+
+    def link_up(self, round_idx: int) -> np.ndarray:
+        """(m,m) bool symmetric keep-mask over the backhaul adjacency:
+        each undirected link drops for this round independently with
+        prob ``link_drop_prob`` (keyed per (round, edge))."""
+        m = self.fl.num_clusters
+        up = np.ones((m, m), bool)
+        if self.fc.link_drop_prob <= 0.0:
+            return up
+        for i in range(m):
+            for j in range(i + 1, m):
+                if not self.adj[i, j]:
+                    continue
+                if self._rng(round_idx, self._STREAM_LINK,
+                             i * m + j).random() < self.fc.link_drop_prob:
+                    up[i, j] = up[j, i] = False
+        return up
+
+    def timeouts(self, mask: np.ndarray, speeds: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Straggler-timeout retry ladder over the participating cohort.
+
+        A participant's local compute scales as 1/speed; its attempt-a
+        budget is ``timeout_factor * retry_backoff**a`` times the
+        cohort-*median* compute. Returns ``(attempts, timed_out,
+        ref_mult)``: aborted attempts per device (the smallest a whose
+        budget covers it), the devices no budget covers within
+        ``max_retries`` retries (dropped from the round), and the
+        median multiplier the budgets were derived from. Deterministic
+        given the cohort — no RNG stream needed."""
+        n = speeds.shape[0]
+        attempts = np.zeros(n, np.int64)
+        timed_out = np.zeros(n, bool)
+        active = np.asarray(mask) > 0
+        if self.fc.timeout_factor <= 0.0 or not active.any():
+            return attempts, timed_out, 1.0
+        ref = float(np.median(speeds[active]))
+        # time_d <= budget_a  <=>  ref <= F * backoff^a * speed_d
+        need = ref / (self.fc.timeout_factor * np.maximum(speeds, 1e-12))
+        for a in range(self.fc.max_retries + 1):
+            covered = need <= self.fc.retry_backoff ** a
+            if a == 0:
+                pending = active & ~covered
+            else:
+                attempts[pending] += 1
+                pending = pending & ~covered
+        timed_out = pending
+        attempts[timed_out] += 1  # the final, also-aborted attempt
+        return attempts, timed_out, ref
+
+    def realize(self, round_idx: int, mask: np.ndarray,
+                speeds: np.ndarray, labels: np.ndarray) -> FaultPlan:
+        """The round's full :class:`FaultPlan`: outage windows, link
+        survival (+ component count of the surviving graph) and the
+        timeout ladder over the cohort that outages left standing."""
+        down = self.cluster_down(round_idx)
+        up = self.link_up(round_idx)
+        ncomp = int(topo.connected_components(self.adj & up).max()) + 1
+        cohort = np.asarray(mask) * (~down[np.asarray(labels)])
+        attempts, timed_out, ref = self.timeouts(cohort, speeds)
+        return FaultPlan(round_idx, down, up, ncomp, attempts,
+                         timed_out, ref)
+
+
 class ScenarioEngine:
     """Stateful per-round realization of a :class:`ScenarioConfig`.
 
@@ -151,8 +336,12 @@ class ScenarioEngine:
         # (same construction as cefedavg.make_w_schedule)
         hier = topo.Hierarchy.from_config(fl)
         adj = hier.adjacency(1, fl.topology, fl)
+        self.adj = np.asarray(adj, bool)
         self.H = topo.mixing_matrix(adj, fl.mixing)
         self.speed_multipliers = sample_speed_multipliers(sc, fl.n, self.rng)
+        self.faults = (FaultModel(sc.faults, fl, self.adj)
+                       if sc.faults is not None and not sc.faults.trivial
+                       else None)
         self.round_index = 0
 
     # -- per-round draws -----------------------------------------------------
@@ -223,13 +412,33 @@ class ScenarioEngine:
         return mask
 
     def step(self) -> RoundPlan:
-        """Advance one global round: mobility, then sampling, then the
-        induced (W_intra, W_inter)."""
+        """Advance one global round: mobility, then sampling, then
+        faults (outages silence whole clusters, link loss degrades the
+        round's mixing matrix, timeouts drop stragglers), then the
+        induced (W_intra, W_inter). Fault degradation never raises: a
+        fully-dark round simply yields an all-zero cohort and identity
+        mixing."""
         self._step_mobility()
         mask = self._draw_mask()
-        W_intra, W_inter = make_masked_w(self.fl, self.labels, mask, self.H)
+        fault, H_eff = None, None
+        H_t = self.H
+        if self.faults is not None:
+            fault = self.faults.realize(self.round_index, mask,
+                                        self.speed_multipliers, self.labels)
+            # dark clusters train nothing; exhausted stragglers drop out
+            mask = (mask * (~fault.cluster_down[self.labels])
+                    * (~fault.timed_out))
+            if not fault.link_up.all():
+                # re-weight over the surviving (maybe partitioned) graph;
+                # mixing_matrix of a disconnected graph is block-diagonal,
+                # i.e. per-component gossip
+                H_eff = topo.mixing_matrix(self.adj & fault.link_up,
+                                           self.fl.mixing)
+                H_t = H_eff
+        W_intra, W_inter = make_masked_w(self.fl, self.labels, mask, H_t)
         plan = RoundPlan(self.round_index, self.fl.num_clusters,
-                         self.labels.copy(), mask, W_intra, W_inter)
+                         self.labels.copy(), mask, W_intra, W_inter,
+                         fault=fault, H_eff=H_eff)
         self.round_index += 1
         return plan
 
@@ -273,3 +482,25 @@ def get_scenario(name: str) -> ScenarioConfig:
         raise ValueError(
             f"unknown scenario {name!r}; choose from {sorted(SCENARIOS)}")
     return SCENARIOS[name]
+
+
+#: fault presets (docs/FAULT_MODEL.md): attach to any ScenarioConfig via
+#: ``dataclasses.replace(sc, faults=get_faults("outage"))`` or the
+#: launcher's ``--faults`` flag
+FAULTS: Dict[str, FaultConfig] = {
+    "outage": FaultConfig(outage_prob=0.08, outage_len=2),
+    "flaky_links": FaultConfig(link_drop_prob=0.15),
+    "stragglers": FaultConfig(timeout_factor=1.5, max_retries=2,
+                              retry_backoff=1.5),
+    "chaos": FaultConfig(outage_prob=0.05, outage_len=2,
+                         link_drop_prob=0.1, timeout_factor=1.5,
+                         max_retries=2, retry_backoff=1.5),
+}
+
+
+def get_faults(name: str) -> FaultConfig:
+    """Look up a named fault preset (see :data:`FAULTS`)."""
+    if name not in FAULTS:
+        raise ValueError(
+            f"unknown fault preset {name!r}; choose from {sorted(FAULTS)}")
+    return FAULTS[name]

@@ -344,7 +344,14 @@ class ShardedBankCEFedAvg(FLSimulator):
     covers init as well as the steady-state round: the bank is built
     per-shard via ``ModelBank.from_model_sharded``
     (``jax.make_array_from_callback``), each device filling only its own
-    ``(1, T)`` rows — the multi-host-correct path.
+    ``(1, T)`` rows — the multi-host-correct path. Checkpoint *restore*
+    keeps the same guarantee: ``RunCheckpoint`` writes the buffers back
+    through :meth:`ModelBank.load_rows`, which fills each device's row
+    shard against the resident sharding. Fault injection
+    (``ScenarioConfig.faults``) needs no sharded special-casing either:
+    a scenario engine forces the dense-operator path (``structured``
+    False below), so outage-gated / link-degraded mixing matrices flow
+    through ``dense_mix_rows`` like any other row-stochastic operator.
     """
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl, data,

@@ -94,6 +94,31 @@ def _connected(adj: np.ndarray) -> bool:
     return len(seen) == m
 
 
+def connected_components(adj: np.ndarray) -> np.ndarray:
+    """(m,) component label per node of a (possibly disconnected)
+    adjacency — labels are 0..k-1 in order of each component's smallest
+    node. Backhaul link loss (``FaultModel``) can partition the graph
+    mid-run; gossip then runs per component (``mixing_matrix`` of a
+    disconnected graph is block-diagonal over these labels), and the
+    fault trace records the component count as the degradation signal."""
+    m = adj.shape[0]
+    comp = np.full(m, -1, dtype=np.int64)
+    k = 0
+    for s in range(m):
+        if comp[s] >= 0:
+            continue
+        comp[s] = k
+        frontier = [s]
+        while frontier:
+            i = frontier.pop()
+            for j in np.nonzero(adj[i])[0]:
+                if comp[j] < 0:
+                    comp[j] = k
+                    frontier.append(int(j))
+        k += 1
+    return comp
+
+
 TOPOLOGIES = {
     "ring": lambda m, cfg=None: ring(m),
     "complete": lambda m, cfg=None: complete(m),

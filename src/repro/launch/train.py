@@ -67,11 +67,28 @@ def main(argv=None):
                          "adaptive_tau gives slow clusters fewer local "
                          "steps; pi_decay runs deep gossip early, sparse "
                          "late")
-    from repro.core.scenario import SCENARIOS
+    from repro.core.scenario import FAULTS, SCENARIOS
     ap.add_argument("--scenario", choices=sorted(SCENARIOS), default="",
                     help="named wall-clock scenario (bank engine): device "
                          "heterogeneity / client sampling / mobility — "
                          "adaptive_tau needs a heterogeneous one to bite")
+    ap.add_argument("--faults", choices=sorted(FAULTS), default="",
+                    help="named fault preset (bank engine, "
+                         "docs/FAULT_MODEL.md): edge outages / backhaul "
+                         "link loss / straggler timeouts injected into "
+                         "the scenario; engines degrade gracefully "
+                         "instead of crashing")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="crash-consistent run checkpoint directory "
+                         "(bank engine): full run state written "
+                         "atomically every --ckpt-every rounds")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="rounds between run checkpoints (with "
+                         "--ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--ckpt-dir (bit-identical to the "
+                         "uninterrupted run)")
     ap.add_argument("--async-staleness", type=int, default=-1,
                     metavar="S",
                     help="bounded-staleness async rounds (bank engine): "
@@ -98,9 +115,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.engine != "bank" and (args.schedule != "static"
                                   or args.scenario or args.hierarchy
-                                  or args.async_staleness >= 0):
-        ap.error("--schedule/--scenario/--hierarchy/--async-staleness "
-                 "require --engine bank")
+                                  or args.async_staleness >= 0
+                                  or args.faults or args.ckpt_dir
+                                  or args.resume):
+        ap.error("--schedule/--scenario/--hierarchy/--async-staleness/"
+                 "--faults/--ckpt-dir/--resume require --engine bank")
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir")
 
     if args.multihost:
         from repro.launch.mesh import initialize_multihost
@@ -172,8 +193,11 @@ def run_bank_engine(args):
     """Drive ``ShardedBankCEFedAvg`` — one bank row per device — on
     synthetic federated classification data, logging loss/accuracy of the
     edge models per global round (the paper's evaluation protocol)."""
+    import dataclasses
+
+    from repro.checkpoint import RunCheckpoint
     from repro.core.runtime import compute_bound_runtime_model
-    from repro.core.scenario import get_scenario
+    from repro.core.scenario import get_faults, get_scenario
     from repro.core.sharded import ShardedBankCEFedAvg
     from repro.data.federated import (build_fl_data, dirichlet_partition,
                                       make_synthetic_classification)
@@ -210,6 +234,12 @@ def run_bank_engine(args):
     parts = dirichlet_partition(y, n, alpha=0.3, seed=0)
     data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
     scenario = get_scenario(args.scenario) if args.scenario else None
+    if args.faults:
+        # fault injection rides on the scenario engine; without a named
+        # scenario, attach the faults to the homogeneous baseline
+        scenario = dataclasses.replace(
+            scenario or get_scenario("homogeneous"),
+            faults=get_faults(args.faults))
     schedule = None if args.schedule == "static" else args.schedule
     sim = ShardedBankCEFedAvg(
         lambda k: init_mlp_classifier(k, 16, 32, 8), apply_mlp_classifier,
@@ -220,10 +250,18 @@ def run_bank_engine(args):
           f"({sim.bank.layout.row_nbytes} B/row), m={m} clusters, "
           f"mesh={dict(mesh.shape)}, schedule={args.schedule}"
           + (f", scenario={args.scenario}" if args.scenario else "")
+          + (f", faults={args.faults}" if args.faults else "")
           + (f", async_staleness={args.async_staleness}" if use_async
              else ""))
     rt = compute_bound_runtime_model() if use_async else None
-    for r in range(args.rounds):
+    rc = RunCheckpoint(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if args.resume and rc is not None and rc.exists():
+        meta = rc.restore(
+            sim, staleness=args.async_staleness if use_async else None)
+        start = meta["round"]
+        print(f"resumed from {rc.path} at round {start}")
+    for r in range(start, args.rounds):
         t0 = time.time()
         if use_async:
             sim.step_round_async(args.async_staleness, rt)
@@ -236,6 +274,9 @@ def run_bank_engine(args):
         acc, loss = sim.evaluate(256)
         print(f"round {r}: acc={acc:.3f} loss={loss:.4f} "
               f"({time.time()-t0:.1f}s){extra}", flush=True)
+        if rc is not None and (r + 1) % max(args.ckpt_every, 1) == 0:
+            rc.save(sim, round_idx=r + 1,
+                    staleness=args.async_staleness if use_async else None)
     if args.ckpt:
         save_checkpoint(args.ckpt, jax.device_get(sim.global_model()),
                         {"engine": "bank", "rounds": args.rounds})

@@ -23,7 +23,7 @@ def _rec(name, derived):
     return {"name": name, "us_per_call": 1.0, "derived": derived}
 
 
-def _smoke(speedup, ratio, async_ratio=0.97):
+def _smoke(speedup, ratio, async_ratio=0.97, fault_ratio=0.98):
     return [
         _rec("kern_boundary_fused_femnist_cnn_n16",
              f"bank qt-boundary;speedup_vs_perleaf={speedup}x"),
@@ -31,6 +31,8 @@ def _smoke(speedup, ratio, async_ratio=0.97):
              f"half/full_round_time={ratio};blurb"),
         _rec("clock_async_s2_lognormal",
              f"async/barrier_makespan={async_ratio};rounds=8"),
+        _rec("faults_chaos_cefedavg",
+             f"faulted/clean_final_acc={fault_ratio};rounds=6"),
     ]
 
 
@@ -75,6 +77,14 @@ def test_async_slower_than_barrier_fails(baseline):
     failures, _ = check(_smoke(1.85, 1.39, async_ratio=1.0),
                         baseline, 2.5)
     assert failures == []
+
+
+def test_fault_degradation_collapse_fails(baseline):
+    """An engine that survives the chaos preset but quietly collapses
+    to near-random accuracy must fail the degradation floor."""
+    failures, _ = check(_smoke(1.85, 1.39, fault_ratio=0.2),
+                        baseline, 2.5)
+    assert failures == ["faulted/clean_final_acc"]
 
 
 def test_missing_record_is_an_error(baseline, tmp_path, capsys):

@@ -15,7 +15,8 @@ DOC_MODULES = ("repro.core.cefedavg", "repro.core.gossip",
                "repro.core.topology", "repro.core.scenario",
                "repro.core.clock", "repro.core.runtime",
                "repro.core.modelbank", "repro.core.program",
-               "repro.core.groups", "repro.kernels.gossip_mix")
+               "repro.core.groups", "repro.kernels.gossip_mix",
+               "repro.checkpoint.ckpt", "repro.checkpoint.runckpt")
 
 
 @pytest.mark.parametrize("modname", DOC_MODULES)

@@ -1,0 +1,312 @@
+"""Fault injection: keyed FaultModel draws, graceful degradation of every
+engine (identity rows for dark clusters, per-component gossip under link
+loss, straggler retry ladders), and the row-stochasticity of every mixing
+operator under faults (ISSUE 8 acceptance)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, FaultConfig, ScenarioConfig
+from repro.core import gossip as gsp
+from repro.core import topology as topo
+from repro.core.cefedavg import FLSimulator
+from repro.core.clock import fault_compute_penalty, run_wall_clock
+from repro.core.groups import GroupRegistry
+from repro.core.runtime import paper_runtime_model
+from repro.core.scenario import (FAULTS, FaultModel, ScenarioEngine,
+                                 get_faults, make_masked_w)
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+CHAOS = FaultConfig(outage_prob=0.25, outage_len=2, link_drop_prob=0.2,
+                    timeout_factor=1.2, max_retries=2, retry_backoff=1.5,
+                    seed=11)
+
+
+def _fl(**kw):
+    base = dict(num_clusters=4, devices_per_cluster=3, tau=2, q=1, pi=2,
+                topology="ring")
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _sim(fl, *, scenario=None, seed=0, bank=True, schedule=None):
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, data, lr=0.1, batch_size=16, seed=seed,
+        scenario=scenario, bank=bank, schedule=schedule)
+
+
+def _stochastic(W, atol=1e-6):
+    W = np.asarray(W)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=atol)
+    assert (W >= -atol).all()
+
+
+# ---------------------------------------------------------------------------
+# fault_gate: the one degradation primitive
+# ---------------------------------------------------------------------------
+
+def test_fault_gate_identity_rows_and_dropped_columns():
+    labels = np.repeat(np.arange(4), 3)
+    W = np.full((12, 12), 1 / 12.0)
+    down = np.array([True, False, False, True])
+    G = gsp.fault_gate(W, labels, down)
+    _stochastic(G)
+    dark = down[labels]
+    np.testing.assert_allclose(G[dark], np.eye(12)[dark])   # dark: identity
+    assert np.allclose(G[~dark][:, dark], 0.0)              # dark cols gone
+    # surviving rows fold the dropped mass onto their diagonal
+    assert (np.diag(G)[~dark] > np.diag(W)[~dark]).all()
+
+
+def test_fault_gate_no_fault_is_bitwise_identity():
+    labels = np.repeat(np.arange(3), 2)
+    W = topo.mixing_matrix(topo.build_adjacency("ring", 6), "metropolis")
+    G = gsp.fault_gate(W, labels, np.zeros(3, bool))
+    assert (G == np.float32(W)).all()
+
+
+def test_fault_gate_all_down_is_identity():
+    labels = np.repeat(np.arange(3), 2)
+    G = gsp.fault_gate(np.full((6, 6), 1 / 6.0), labels, np.ones(3, bool))
+    np.testing.assert_allclose(G, np.eye(6))
+
+
+def test_tier_operator_fault_gates_row_stochastic():
+    """Dense TierMix operators degraded for an outage — the tiered form
+    GroupRegistry.faulted_operator wraps — stay row-stochastic with
+    identity rows for the dark clusters."""
+    fl = _fl()
+    hier = topo.Hierarchy.from_config(fl)
+    W = hier.tier_operator(1, 2, fl.topology, fl.mixing, fl)
+    labels = np.repeat(np.arange(4), 3)
+    down = np.array([False, True, False, False])
+    G = gsp.fault_gate(W, labels, down)
+    _stochastic(G)
+    dark = down[labels]
+    np.testing.assert_allclose(G[dark], np.eye(fl.n)[dark])
+
+
+@pytest.mark.multidevice
+def test_registry_faulted_operator_row_stochastic():
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices (CI multidevice lane)")
+    from repro.launch.mesh import make_replica_mesh
+    fl = _fl(num_clusters=4, devices_per_cluster=2)
+    reg = GroupRegistry(fl, make_replica_mesh(8))
+    down = np.array([False, True, False, False])
+    G = reg.faulted_operator(1, 2, down)
+    _stochastic(G)
+    dark = down[np.repeat(np.arange(4), 2)]
+    np.testing.assert_allclose(G[dark], np.eye(fl.n)[dark])
+    # nothing down degenerates to the plain operator, bitwise
+    assert (reg.faulted_operator(1, 2, np.zeros(4, bool))
+            == np.float32(reg.operator(1, 2))).all()
+
+
+# ---------------------------------------------------------------------------
+# FaultModel: keyed draws, stateless outage windows, timeout ladder
+# ---------------------------------------------------------------------------
+
+def test_fault_model_draws_are_keyed_and_order_free():
+    fl = _fl()
+    a = FaultModel(CHAOS, fl)
+    b = FaultModel(CHAOS, fl)
+    mask = np.ones(fl.n)
+    speeds = np.linspace(0.3, 2.0, fl.n)
+    labels = np.repeat(np.arange(4), 3)
+    # query b out of order and twice — the draws only key on the round
+    for r in (5, 1, 5, 3):
+        b.realize(r, mask, speeds, labels)
+    for r in range(8):
+        assert (a.realize(r, mask, speeds, labels).trace()
+                == b.realize(r, mask, speeds, labels).trace())
+
+
+def test_outage_windows_are_stateless_and_span_rounds():
+    """cluster_down is a pure function of (config, round): membership
+    matches a brute-force replay of the keyed window draws, so resume
+    needs no fault state in the checkpoint; multi-round windows occur."""
+    fl = _fl(num_clusters=6, devices_per_cluster=1)
+    fc = FaultConfig(outage_prob=0.3, outage_len=3, seed=2)
+    fm = FaultModel(fc, fl)
+    R = 40
+    down = np.array([fm.cluster_down(r) for r in range(R)])
+    assert down.any() and not down.all()
+    # brute-force: window starts at s w.p. outage_prob with keyed
+    # length 1..outage_len; dark at t iff some window covers t
+    expect = np.zeros((R, 6), bool)
+    for c in range(6):
+        for s in range(R):
+            if fm._rng(s, fm._STREAM_OUTAGE, c).random() < fc.outage_prob:
+                length = int(fm._rng(s, fm._STREAM_OUTAGE_LEN, c)
+                             .integers(1, fc.outage_len + 1))
+                expect[s:s + length, c] = True
+    np.testing.assert_array_equal(down, expect)
+    streaks = (down[1:] & down[:-1]).any()
+    assert streaks, "outage_len=3 never produced a multi-round window"
+
+
+def test_timeout_ladder_prices_stragglers():
+    fl = _fl()
+    fc = FaultConfig(timeout_factor=1.2, max_retries=2, retry_backoff=1.5,
+                     seed=0)
+    fm = FaultModel(fc, fl)
+    speeds = np.ones(fl.n)
+    speeds[0] = 0.01          # hopeless straggler: exhausts the ladder
+    speeds[1] = 0.7           # needs one retry: 1/(1.2*0.7) > 1.5**0
+    speeds[2] = 0.9           # survives the first budget: 1/(1.2*0.9) <= 1
+    mask = np.ones(fl.n)
+    attempts, timed_out, ref = fm.timeouts(mask, speeds)
+    assert timed_out[0] and attempts[0] == fc.max_retries + 1
+    assert not timed_out[1] and attempts[1] == 1
+    assert not timed_out[2] and attempts[2] == 0
+    assert not timed_out[3:].any() and (attempts[3:] == 0).all()
+    # the exhausted ladder is priced as extra wall-clock
+    labels = np.repeat(np.arange(4), 3)
+    fp = fm.realize(0, mask, speeds, labels)
+    survivors = mask * (~fp.timed_out)
+    rt = paper_runtime_model()
+    from repro.core import program as prg
+    pen = fault_compute_penalty(rt, prg.canonical_program(fl), fc, fp,
+                                mask=survivors)
+    assert pen > 0.0
+    # no aborted attempt -> zero penalty (the fault-free anchor)
+    calm = fm.realize(0, mask, np.ones(fl.n), labels)
+    assert fault_compute_penalty(rt, prg.canonical_program(fl), fc, calm,
+                                 mask=mask) == 0.0
+
+
+def test_link_loss_partitions_gossip_per_component():
+    fl = _fl(num_clusters=4, devices_per_cluster=1, topology="ring")
+    fc = FaultConfig(link_drop_prob=0.9, seed=3)
+    sc = ScenarioConfig(name="links", faults=fc)
+    eng = ScenarioEngine(sc, fl)
+    saw_partition = False
+    for _ in range(10):
+        plan = eng.step()
+        if plan.fault is None or plan.H_eff is None:
+            continue
+        _stochastic(plan.H_eff)
+        up = eng.adj & plan.fault.link_up
+        comps = topo.connected_components(up)
+        assert plan.fault.n_components == comps.max() + 1
+        if plan.fault.n_components > 1:
+            saw_partition = True
+            # no mixing weight across components
+            cross = comps[:, None] != comps[None, :]
+            assert np.allclose(plan.H_eff[cross], 0.0)
+    assert saw_partition, "p=0.9 on a 4-ring never partitioned in 10 rounds"
+
+
+# ---------------------------------------------------------------------------
+# every engine degrades instead of crashing; operators stay row-stochastic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ("ce_fedavg", "hier_favg", "fedavg",
+                                  "local_edge"))
+def test_scenario_operators_row_stochastic_under_faults(algo):
+    fl = _fl(algorithm=algo)
+    eng = ScenarioEngine(ScenarioConfig(name="chaos", faults=CHAOS), fl)
+    saw_fault = False
+    for _ in range(8):
+        plan = eng.step()
+        _stochastic(plan.W_intra)
+        _stochastic(plan.W_inter)
+        if plan.fault is not None and plan.fault.any:
+            saw_fault = True
+            # dark clusters contribute nothing to the cohort
+            assert (plan.mask[plan.fault.cluster_down[plan.labels]]
+                    == 0).all()
+    assert saw_fault
+
+
+@pytest.mark.parametrize("mode", ("bank", "legacy", "async"))
+def test_engines_survive_fault_sweep(mode):
+    fl = _fl()
+    sc = ScenarioConfig(name="chaos", speed_dist="lognormal",
+                        speed_spread=0.5, faults=CHAOS)
+    sim = _sim(fl, scenario=sc, bank=(mode != "legacy"))
+    rt = paper_runtime_model()
+    labels = np.repeat(np.arange(4), 3)
+    saw_fault = False
+    for _ in range(6):
+        if mode == "async":
+            plan = sim.step_round_async(2, rt)
+        else:
+            plan = sim.step_round()
+        fault = plan.fault
+        if fault is not None and fault.any:
+            saw_fault = True
+            # the exact degraded operators the engine multiplied:
+            # masked W's built from the (possibly link-degraded) H, then
+            # gated for the outage — all row-stochastic
+            H = plan.H_eff if plan.H_eff is not None else sim.engine.H
+            Wi, We = make_masked_w(fl, plan.labels, plan.mask, H)
+            for W in (Wi, We):
+                _stochastic(gsp.fault_gate(W, plan.labels,
+                                           fault.cluster_down))
+    assert saw_fault
+    acc, _ = sim.evaluate(256)
+    assert np.isfinite(acc)
+
+
+def test_fault_presets_resolve_and_validate():
+    for name in FAULTS:
+        fc = get_faults(name)
+        fc.validate()
+        assert not fc.trivial
+    with pytest.raises(ValueError, match="unknown fault preset"):
+        get_faults("nope")
+    with pytest.raises(AssertionError):
+        FaultConfig(outage_prob=1.5).validate()
+    # trivial faults don't instantiate a FaultModel
+    sc = ScenarioConfig(name="t", faults=FaultConfig())
+    assert sc.trivial
+    assert ScenarioEngine(sc, _fl()).faults is None
+
+
+def test_faulted_accuracy_within_bound_of_fault_free():
+    """Graceful degradation, quantified: chaos-level faults may slow
+    CE-FedAvg down but must not wreck it — final accuracy at matched
+    rounds stays within 0.15 of the fault-free run."""
+    fl = _fl()
+    rt = paper_runtime_model()
+    base = ScenarioConfig(name="b", speed_dist="lognormal",
+                          speed_spread=0.5)
+    clean = _sim(fl, scenario=base, seed=2)
+    hc = run_wall_clock(clean, rt, 8, eval_every=8)
+    faulted = _sim(fl, scenario=dataclasses.replace(base, faults=CHAOS),
+                   seed=2)
+    hf = run_wall_clock(faulted, rt, 8, eval_every=8)
+    assert hf["acc"][-1] >= hc["acc"][-1] - 0.15, (hc["acc"], hf["acc"])
+    # the injected retries/outages can only cost wall-clock, not save it
+    assert hf["wall_time"][-1] >= hc["wall_time"][-1] * 0.99
+
+
+# ---------------------------------------------------------------------------
+# pi_feedback: closed-loop gossip depth from observed edge disagreement
+# ---------------------------------------------------------------------------
+
+def test_pi_feedback_converges_and_decays_depth():
+    fl = _fl(num_clusters=4, devices_per_cluster=3, pi=4)
+    sim = _sim(fl, schedule="pi_feedback")
+    for _ in range(8):
+        sim.step_round()
+    acc, _ = sim.evaluate(256)
+    assert acc > 0.8
+    trace = sim._schedule_fn.pi_trace
+    assert trace, "schedule never observed disagreement"
+    assert all(1 <= p <= fl.pi for p in trace)
+    # the EMA state is live (checkpointed by RunCheckpoint)
+    assert np.isfinite(sim._schedule_fn.state["ema"])

@@ -1,11 +1,15 @@
 """Optimizers, LR schedules, checkpointing."""
 
+import os
+
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 import pytest
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointStructureError, load_checkpoint,
+                              save_checkpoint)
 from repro.config import TrainConfig
 from repro.optim import adamw, make_lr_schedule, make_optimizer, sgd
 from repro.optim.optimizers import apply_updates
@@ -68,3 +72,63 @@ def test_checkpoint_roundtrip(tmp_path):
     assert meta["arch"] == "test"
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_preserves_extension_dtypes(tmp_path):
+    """bf16 (and friends) must round-trip as themselves, not the opaque
+    void records a bare np.save/np.load produces; exact integer dtypes
+    must survive too (regression: a step counter silently upcast to
+    float corrupts resume arithmetic)."""
+    tree = {"w_bf16": np.arange(12, dtype=ml_dtypes.bfloat16).reshape(3, 4),
+            "w_f8": np.ones(5, dtype=ml_dtypes.float8_e4m3fn),
+            "step": np.asarray(7, np.int32),
+            "mask": np.array([1, 0, 1], np.int64)}
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree)
+    loaded, _ = load_checkpoint(path, like=tree)
+    for k, v in tree.items():
+        assert loaded[k].dtype == v.dtype, k
+        np.testing.assert_array_equal(
+            np.asarray(loaded[k]).view(f"u{v.dtype.itemsize}"),
+            np.asarray(v).view(f"u{v.dtype.itemsize}"))
+
+
+def test_checkpoint_structure_error_names_keys(tmp_path):
+    """A drifted tree raises CheckpointStructureError naming exactly the
+    missing and unexpected paths (the former bare assert said nothing
+    and vanished under python -O)."""
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, {"a": np.ones(3), "opt": {"mu": np.zeros(2)}})
+    like = {"a": np.ones(3), "opt": {"nu": np.zeros(2)}}
+    with pytest.raises(CheckpointStructureError) as ei:
+        load_checkpoint(path, like=like)
+    assert ei.value.missing == ("/opt/nu",)
+    assert ei.value.extra == ("/opt/mu",)
+    assert "/opt/nu" in str(ei.value) and "/opt/mu" in str(ei.value)
+    assert isinstance(ei.value, ValueError)  # back-compat catch sites
+
+
+def test_checkpoint_save_is_atomic(tmp_path, monkeypatch):
+    """A save that dies mid-write must leave the previous checkpoint
+    intact and no temp litter: the archive is written to a temp file
+    and os.replace'd into place."""
+    path = str(tmp_path / "ckpt.npz")
+    old = {"w": np.full(4, 1.0, np.float32)}
+    save_checkpoint(path, old, {"gen": 0})
+    before = os.listdir(tmp_path)
+
+    real_savez = np.savez
+
+    def dying_savez(f, **kw):
+        real_savez(f, **kw)   # bytes hit the temp file...
+        raise OSError("disk died mid-save")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(OSError, match="disk died"):
+        save_checkpoint(path, {"w": np.full(4, 2.0, np.float32)},
+                        {"gen": 1})
+    monkeypatch.undo()
+    assert sorted(os.listdir(tmp_path)) == sorted(before)  # no litter
+    loaded, meta = load_checkpoint(path, like=old)
+    assert meta["gen"] == 0
+    np.testing.assert_array_equal(loaded["w"], old["w"])

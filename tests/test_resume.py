@@ -1,0 +1,251 @@
+"""Crash-consistent resume (ISSUE 8 tentpole): a run killed at round k
+and resumed from its RunCheckpoint replays rounds k..R *bit-identically*
+to the uninterrupted run — parameters AND recorded accuracy history —
+for the flat engine at staleness 0 and 2, the legacy pytree engine, the
+sharded engine (per-shard restore, never materializing the bank on one
+host), and a genuinely killed subprocess (os._exit mid-round)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import RunCheckpoint
+from repro.config import FLConfig, FaultConfig, ScenarioConfig
+from repro.core.cefedavg import FLSimulator
+from repro.core.clock import run_wall_clock
+from repro.core.compress import CompressionConfig
+from repro.core.runtime import paper_runtime_model
+from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                  make_synthetic_classification)
+from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+FL = FLConfig(num_clusters=4, devices_per_cluster=3, tau=2, q=1, pi=2,
+              topology="ring")
+SC = ScenarioConfig(
+    name="chaos", speed_dist="lognormal", speed_spread=0.5,
+    faults=FaultConfig(outage_prob=0.2, outage_len=2, link_drop_prob=0.15,
+                       timeout_factor=1.2, max_retries=2, seed=11))
+
+
+def _sim(fl=FL, *, scenario=SC, seed=1, bank=True, schedule=None,
+         compression=None):
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    return FLSimulator(
+        lambda k: init_mlp_classifier(k, 16, 32, 4),
+        apply_mlp_classifier, fl, data, lr=0.1, batch_size=16, seed=seed,
+        scenario=scenario, bank=bank, schedule=schedule,
+        compression=compression)
+
+
+def _params_np(sim):
+    return [np.asarray(jax.device_get(l))
+            for l in jax.tree.leaves(sim.params)]
+
+
+def _replayable(hist):
+    """Everything in a history that resume must reproduce bitwise —
+    i.e. all of it except ``sim_s``, the *host* wall-seconds
+    instrumentation (real elapsed time, legitimately nondeterministic)."""
+    return {k: v for k, v in hist.items() if k != "sim_s"}
+
+
+def _run(tmpdir, *, kill_at=None, rounds=8, staleness=None, **simkw):
+    """One trajectory through run_wall_clock with per-round checkpoints;
+    ``kill_at`` truncates the first pass and resumes a FRESH sim."""
+    d = str(tmpdir)
+    sim = _sim(**simkw)
+    rt = paper_runtime_model()
+    kw = dict(eval_every=2, ckpt_dir=d, ckpt_every=1,
+              async_staleness=staleness)
+    if kill_at is None:
+        return sim, run_wall_clock(sim, rt, rounds, **kw)
+    run_wall_clock(sim, rt, kill_at, **kw)
+    sim2 = _sim(**simkw)
+    hist = run_wall_clock(sim2, rt, rounds, resume=True, **kw)
+    return sim2, hist
+
+
+@pytest.mark.parametrize("staleness", [None, 0, 2])
+def test_flat_engine_kill_and_resume_bit_identical(tmp_path, staleness):
+    ref_sim, ref = _run(tmp_path / "ref", staleness=staleness)
+    got_sim, got = _run(tmp_path / "killed", kill_at=3,
+                        staleness=staleness)
+    assert _replayable(ref) == _replayable(got)
+    for a, b in zip(_params_np(ref_sim), _params_np(got_sim)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_legacy_engine_kill_and_resume_bit_identical(tmp_path):
+    ref_sim, ref = _run(tmp_path / "ref", bank=False)
+    got_sim, got = _run(tmp_path / "killed", kill_at=4, bank=False)
+    assert ref["acc"] == got["acc"] and ref["wall_time"] == got["wall_time"]
+    for a, b in zip(_params_np(ref_sim), _params_np(got_sim)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_resume_with_error_feedback_residual(tmp_path):
+    """The EF residual is part of the run state: dropping it from the
+    checkpoint would silently change the post-resume trajectory."""
+    comp = CompressionConfig(kind="topk", topk_frac=0.25,
+                             error_feedback=True)
+    ref_sim, ref = _run(tmp_path / "ref", rounds=6, compression=comp)
+    got_sim, got = _run(tmp_path / "killed", rounds=6, kill_at=3,
+                        compression=comp)
+    assert ref["acc"] == got["acc"]
+    for a, b in zip(_params_np(ref_sim), _params_np(got_sim)):
+        np.testing.assert_array_equal(a, b)
+    assert got_sim.bank.residual is not None
+
+
+def test_resume_restores_schedule_state(tmp_path):
+    ref_sim, ref = _run(tmp_path / "ref", schedule="pi_feedback")
+    got_sim, got = _run(tmp_path / "killed", kill_at=4,
+                        schedule="pi_feedback")
+    assert ref["acc"] == got["acc"]
+    assert ref_sim._schedule_fn.state == got_sim._schedule_fn.state
+    # the post-resume depths match the uninterrupted run's tail
+    k = len(got_sim._schedule_fn.pi_trace)
+    assert (ref_sim._schedule_fn.pi_trace[-k:]
+            == got_sim._schedule_fn.pi_trace)
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path):
+    sim = _sim()
+    rt = paper_runtime_model()
+    hist = run_wall_clock(sim, rt, 2, eval_every=1, ckpt_dir=str(tmp_path),
+                          ckpt_every=1, resume=True)   # nothing to resume
+    assert hist["round"] == [1, 2]
+    assert RunCheckpoint(str(tmp_path)).exists()
+
+
+@pytest.mark.multidevice
+def test_sharded_engine_per_shard_resume(tmp_path):
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices (CI multidevice lane)")
+    from repro.core.sharded import ShardedBankCEFedAvg
+    from repro.launch.mesh import make_replica_mesh
+    fl = FLConfig(num_clusters=4, devices_per_cluster=2, tau=2, q=1, pi=2)
+    mesh = make_replica_mesh(8)
+    x, y = make_synthetic_classification(800, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(400, 16, 4, seed=4)
+    parts = dirichlet_partition(y, 8, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+
+    def mk():
+        return ShardedBankCEFedAvg(
+            lambda k: init_mlp_classifier(k, 16, 32, 4),
+            apply_mlp_classifier, fl, data, mesh, lr=0.1, batch_size=16,
+            seed=0, scenario=SC)
+
+    ref = mk()
+    for _ in range(5):
+        ref.step_round()
+    rc = RunCheckpoint(str(tmp_path))
+    s1 = mk()
+    for _ in range(3):
+        s1.step_round()
+    rc.save(s1, round_idx=3)
+    s2 = mk()
+    assert rc.restore(s2)["round"] == 3
+    # restore preserved the row sharding: no single-device bank ever
+    assert s2.bank.params.sharding == s1.bank.params.sharding
+    for _ in range(3, 5):
+        s2.step_round()
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(ref.bank.params)),
+        np.asarray(jax.device_get(s2.bank.params)))
+
+
+# ---------------------------------------------------------------------------
+# subprocess kill: the process genuinely dies mid-round (os._exit), the
+# next process resumes from the surviving atomic checkpoint
+# ---------------------------------------------------------------------------
+
+_DRIVER = textwrap.dedent("""\
+    import json, os, sys
+    import jax.numpy as jnp
+    from repro.config import FLConfig, FaultConfig, ScenarioConfig
+    from repro.core.cefedavg import FLSimulator
+    from repro.core.clock import run_wall_clock
+    from repro.core.runtime import paper_runtime_model
+    from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                      make_synthetic_classification)
+    from repro.models.cnn import (apply_mlp_classifier,
+                                  init_mlp_classifier)
+
+    ckpt_dir, rounds, kill_at, out = sys.argv[1:5]
+    rounds, kill_at = int(rounds), int(kill_at)
+    fl = FLConfig(num_clusters=3, devices_per_cluster=2, tau=2, q=1,
+                  pi=2)
+    sc = ScenarioConfig(name="f", faults=FaultConfig(
+        outage_prob=0.25, outage_len=1, seed=5))
+    x, y = make_synthetic_classification(600, 16, 4, seed=3)
+    tx, ty = make_synthetic_classification(300, 16, 4, seed=4)
+    parts = dirichlet_partition(y, fl.n, alpha=0.5, seed=5)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    sim = FLSimulator(lambda k: init_mlp_classifier(k, 16, 32, 4),
+                      apply_mlp_classifier, fl, data, lr=0.1,
+                      batch_size=16, seed=1, scenario=sc)
+    if kill_at >= 0:
+        orig = sim.step_round
+        done = [0]
+        def dying_step():
+            if done[0] == kill_at:
+                os._exit(17)      # SIGKILL-equivalent: no cleanup runs
+            done[0] += 1
+            return orig()
+        sim.step_round = dying_step
+    hist = run_wall_clock(sim, paper_runtime_model(), rounds,
+                          eval_every=2, ckpt_dir=ckpt_dir, ckpt_every=1,
+                          resume=True)
+    with open(out, "w") as f:
+        json.dump(hist, f)
+""")
+
+
+def _spawn(ckpt_dir, rounds, kill_at, out):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    return subprocess.run(
+        [sys.executable, "-c", _DRIVER, str(ckpt_dir), str(rounds),
+         str(kill_at), str(out)], env=env, capture_output=True, text=True,
+        timeout=600)
+
+
+def _kill_resume_compare(tmp_path, rounds, kill_at):
+    ref_out = tmp_path / "ref.json"
+    p = _spawn(tmp_path / "ref", rounds, -1, ref_out)
+    assert p.returncode == 0, p.stderr
+    killed = _spawn(tmp_path / "killed", rounds, kill_at,
+                    tmp_path / "never.json")
+    assert killed.returncode == 17, (killed.returncode, killed.stderr)
+    resumed_out = tmp_path / "resumed.json"
+    p = _spawn(tmp_path / "killed", rounds, -1, resumed_out)
+    assert p.returncode == 0, p.stderr
+    ref = json.loads(ref_out.read_text())
+    got = json.loads(resumed_out.read_text())
+    assert _replayable(ref) == _replayable(got), (ref, got)
+
+
+def test_subprocess_kill_and_resume_smoke(tmp_path):
+    """Fast-lane variant: die after 2 rounds of 4, resume, compare."""
+    _kill_resume_compare(tmp_path, rounds=4, kill_at=2)
+
+
+@pytest.mark.slow
+def test_subprocess_kill_and_resume_long(tmp_path):
+    """Kill late in a longer faulted run; the resumed process must
+    reproduce the uninterrupted history exactly."""
+    _kill_resume_compare(tmp_path, rounds=10, kill_at=7)

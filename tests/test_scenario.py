@@ -306,3 +306,69 @@ def test_scenario_seed_controls_trajectory():
     h0 = _sim(fl, scenario=sc).run(2)
     h1 = _sim(fl, scenario=dataclasses.replace(sc, seed=7)).run(2)
     assert h0["acc"] != h1["acc"] or h0["loss"] != h1["loss"]
+
+
+# ---------------------------------------------------------------------------
+# fault replay determinism (ISSUE 8): the realized fault trace is a pure
+# function of (config, round) — a killed-and-resumed engine sees exactly
+# the faults the uninterrupted engine would have
+# ---------------------------------------------------------------------------
+
+def test_fault_trace_identical_straight_vs_resumed():
+    from repro.config import FaultConfig
+
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=4,
+                  devices_per_cluster=3, tau=1, q=1, pi=2, topology="ring")
+    sc = ScenarioConfig(
+        name="chaos", speed_dist="lognormal", speed_spread=0.5,
+        sample_fraction=0.8, move_prob=0.2, seed=4,
+        faults=FaultConfig(outage_prob=0.25, outage_len=2,
+                           link_drop_prob=0.2, timeout_factor=1.3,
+                           max_retries=2, seed=9))
+    R, kill_at = 10, 4
+
+    def traces(eng, rounds):
+        out = []
+        for _ in range(rounds):
+            plan = eng.step()
+            assert plan.fault is not None
+            out.append(plan.fault.trace())
+        return out
+
+    straight = traces(ScenarioEngine(sc, fl), R)
+    assert any(t[1] or t[2] or t[4] for t in straight), \
+        "chaos config produced no faults in 10 rounds"
+
+    # kill at round 4; "resume" restores exactly what RunCheckpoint
+    # saves of an engine: the mobility labels and the round cursor
+    a = ScenarioEngine(sc, fl)
+    traces(a, kill_at)
+    b = ScenarioEngine(sc, fl)
+    b.labels = a.labels.copy()
+    b.round_index = a.round_index
+    resumed = traces(ScenarioEngine(sc, fl), kill_at) + traces(b, R - kill_at)
+    assert resumed == straight
+
+
+def test_faulted_engine_parity_across_duplicate_engines():
+    """Two engines with the same faulted config realize identical plans
+    round by round (cohort, operators, H_eff) — the property different
+    algorithms rely on to be compared under identical fault conditions."""
+    from repro.config import FaultConfig
+
+    fl = FLConfig(algorithm="ce_fedavg", num_clusters=3,
+                  devices_per_cluster=2, tau=1, q=1, pi=2, topology="ring")
+    sc = ScenarioConfig(name="f", sample_fraction=0.8, seed=1,
+                        faults=FaultConfig(outage_prob=0.3, outage_len=2,
+                                           link_drop_prob=0.25, seed=2))
+    e1, e2 = ScenarioEngine(sc, fl), ScenarioEngine(sc, fl)
+    for _ in range(8):
+        p1, p2 = e1.step(), e2.step()
+        np.testing.assert_array_equal(p1.mask, p2.mask)
+        np.testing.assert_array_equal(p1.W_intra, p2.W_intra)
+        np.testing.assert_array_equal(p1.W_inter, p2.W_inter)
+        assert (p1.fault is None) == (p2.fault is None)
+        if p1.fault is not None:
+            assert p1.fault.trace() == p2.fault.trace()
+        if p1.H_eff is not None:
+            np.testing.assert_array_equal(p1.H_eff, p2.H_eff)
