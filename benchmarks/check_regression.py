@@ -72,6 +72,13 @@ CHECKS = (
     # floor-with-tolerance applies.
     ("faulted/clean_final_acc", ("faults_chaos_cefedavg",),
      "faults_chaos_cefedavg", "floor"),
+    # O(cohort) memory (ISSUE 9): peak resident slab bytes of the
+    # streamed client store at n=10^4 vs n=10^3 virtual clients under
+    # the same cohort config. Exact byte accounting (host-independent)
+    # that must not scale with the population; the ceiling tolerance
+    # only absorbs one slab-bucket power-of-two step.
+    ("resident_n10k/n1k", ("scale_resident_ratio",),
+     "scale_resident_ratio", "ceiling"),
 )
 
 _NUM = r"([-+0-9.eE]+)"

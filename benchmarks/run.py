@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
     tab1  special-case equivalences (Table 1 / §4.3)
     kern  kernel-path microbenchmarks (XLA reference wall time, this host)
     roof  roofline summary from experiments/dryrun (if present)
+    scale population scaling: streamed client store at n in {1e3, 1e4}
 """
 from __future__ import annotations
 
@@ -427,9 +428,67 @@ def faults(full=False, smoke=False):
         assert ratio >= 0.85, f"fault degradation too steep: {ratio:.3f}"
 
 
+def scale(full=False, smoke=False):
+    """Population scaling (ISSUE 9): the streamed client-state store at
+    n in {10^3, 10^4} virtual clients — us/round plus the peak resident
+    slab bytes and the compressed cold-store footprint. The contract is
+    O(cohort) memory: both sizes run the same cohort config, so the
+    resident slab must NOT grow with n. The ``resident_n10k/n1k``
+    derived ratio is the regression guard (check_regression ceilings
+    it); it is exact byte accounting of ``peak_slab_bytes``, identical
+    on every host."""
+    import dataclasses
+
+    from repro.config import PopulationConfig
+    from repro.core.cefedavg import FLSimulator
+    from repro.core.scenario import get_scenario
+    from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                      make_synthetic_classification)
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+    m = 4
+    n = m * 4                                  # enumerated data shards
+    fl = _fl(m=m, dpc=n // m, tau=2, q=2, pi=2)
+    x, y = make_synthetic_classification(1600, 16, 8, seed=0, noise=2.5)
+    tx, ty = make_synthetic_classification(400, 16, 8, seed=1, noise=2.5)
+    parts = dirichlet_partition(y, n, alpha=0.3, seed=0)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    base = get_scenario("sampled")
+    rounds = 3 if smoke else 8
+    peaks = {}
+    for pop in (1_000, 10_000):
+        scenario = dataclasses.replace(base, population=PopulationConfig(
+            clients_per_cluster=pop // m, cohort_per_cluster=4))
+        sim = FLSimulator(
+            lambda k: init_mlp_classifier(k, 16, 32, 8),
+            apply_mlp_classifier, fl, data, lr=0.1, batch_size=16,
+            seed=0, scenario=scenario)
+        sim.step_round()                       # compile + first bucket
+        best = float("inf")
+        for _ in range(rounds):
+            # the streamed round ends with its host page-out, so the
+            # wall time below is already synchronized — no block needed
+            with Timer() as t:
+                sim.step_round()
+            best = min(best, t.dt)
+        peaks[pop] = sim.peak_slab_bytes
+        row(f"scale_pop_n{pop}", best * 1e6,
+            f"peak_slab_bytes={sim.peak_slab_bytes};"
+            f"store_bytes={sim.store.nbytes};"
+            f"cohort_cap={sim.engine.cohort_cap};"
+            f"population={sim.engine.population}")
+    ratio = peaks[10_000] / max(peaks[1_000], 1)
+    row("scale_resident_ratio", 0.0,
+        f"resident_n10k/n1k={ratio:.4f};resident slab must track the "
+        f"cohort, not the population")
+    if not smoke:
+        assert ratio <= 1.0 + 1e-9, (
+            f"resident slab grew with population: {ratio:.4f}")
+
+
 BENCHES = {"fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
            "fig6": fig6, "tab1": tab1, "kern": kern, "roof": roof,
-           "async": async_clock, "faults": faults}
+           "async": async_clock, "faults": faults, "scale": scale}
 
 
 def main() -> None:

@@ -71,6 +71,15 @@ def _capture(sim, round_idx: int, clock, hist,
         if sim.bank.residual is not None:
             bank["residual"] = _host(sim.bank.residual)
         state["bank"] = bank
+    elif getattr(sim, "store", None) is not None:
+        # streamed engine: the cold store IS the model state — cluster
+        # references plus the encoded momentum rows (stored encoded, so
+        # a save/restore round trip reproduces identical cold bytes
+        # under every codec), and the last-sync label tracker. The
+        # (S,)-shaped pieces are variable-length; ckpt.py validates
+        # tree *paths*, not shapes, so the structure stays fixed.
+        state["store"] = sim.store.snapshot()
+        state["page_labels"] = np.asarray(sim._page_labels, np.int64)
     else:
         state["params"] = jax.tree.map(_host, sim._params)
         state["mom"] = jax.tree.map(_host, sim._mom)
@@ -117,6 +126,9 @@ def _assign(sim, state: Dict[str, Any], clock, hist) -> None:
     if sim.bank is not None:
         b = state["bank"]
         sim.bank.load_rows(b["params"], b["mom"], b.get("residual"))
+    elif getattr(sim, "store", None) is not None:
+        sim.store.load(state["store"])
+        sim._page_labels = np.asarray(state["page_labels"], np.int64)
     else:
         sim._params = jax.tree.map(jnp.asarray, state["params"])
         sim._mom = jax.tree.map(jnp.asarray, state["mom"])
@@ -183,7 +195,9 @@ class RunCheckpoint:
         save_checkpoint(self.path, state, meta={
             "round": int(round_idx),
             "staleness": (None if staleness is None else int(staleness)),
-            "engine": "bank" if sim.bank is not None else "legacy"})
+            "engine": ("bank" if sim.bank is not None else
+                       "streamed" if getattr(sim, "store", None) is not None
+                       else "legacy")})
 
     def restore(self, sim, *, clock=None, hist=None,
                 staleness: Optional[int] = None) -> Dict[str, Any]:

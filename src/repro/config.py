@@ -285,6 +285,45 @@ class FaultConfig:
 
 
 @dataclass(frozen=True)
+class PopulationConfig:
+    """Virtual-client population (ISSUE 9): per-cluster member-count
+    *distributions* replace enumerated devices, so a cluster can claim
+    10^4 members without 10^4 resident bank rows.
+
+    Realized once (keyed by the scenario seed) by
+    ``core.scenario.PopulationEngine``: each cluster draws its member
+    count from ``size_dist`` around ``clients_per_cluster``, client ids
+    are the implicit contiguous ranges under the cluster-size prefix
+    sums, and every per-round draw (cohort sampling, visit mobility,
+    per-client speeds) is keyed by ``SeedSequence`` — never stateful —
+    so a resumed run replays the identical population trace. Client
+    state lives in the streaming ``core.clientstore.ClientStore``:
+    only each round's cohort is resident, cold rows are stored under
+    ``codec``, and each cohort client trains on data shard
+    ``client_id % n`` of the enumerated per-device data."""
+    clients_per_cluster: int = 1000  # mean cluster size
+    size_dist: str = "fixed"         # fixed | uniform | lognormal
+    size_spread: float = 0.0         # uniform half-width / lognormal sigma
+    cohort_per_cluster: int = 4      # sampled members per cluster per round
+    codec: str = "f32"               # cold-row codec (compress.COLD_CODECS)
+
+    SIZE_DISTS = ("fixed", "uniform", "lognormal")
+
+    def validate(self) -> None:
+        assert self.clients_per_cluster >= 1
+        assert self.size_dist in self.SIZE_DISTS, \
+            f"unknown size_dist {self.size_dist!r}"
+        assert self.size_spread >= 0.0
+        if self.size_dist == "uniform":
+            assert self.size_spread < 1.0, \
+                "uniform size spread must leave clusters nonempty"
+        assert self.cohort_per_cluster >= 1
+        from repro.core.compress import COLD_CODECS
+        assert self.codec in COLD_CODECS, \
+            f"unknown cold-row codec {self.codec!r}"
+
+
+@dataclass(frozen=True)
 class ScenarioConfig:
     """A wall-clock scenario: who trains each round, how fast, and where.
 
@@ -293,6 +332,12 @@ class ScenarioConfig:
     between global rounds, and by ``core.clock.EventClock`` which charges
     each round the slowest *participating* device's compute plus the
     algorithm's communication terms (eq. 8 with the max_k rule).
+
+    With ``population`` set, the scenario describes a *virtual*
+    population instead of the enumerated devices:
+    ``core.scenario.PopulationEngine`` draws each round's cohort from
+    the per-cluster size distributions and ``FLSimulator`` runs the
+    streamed client-store engine (O(cohort) resident memory).
     """
     name: str = "homogeneous"
     # -- device-speed heterogeneity (multipliers on hw.device_flops) --------
@@ -308,6 +353,8 @@ class ScenarioConfig:
     seed: int = 0
     # -- fault injection (None = fault-free) ---------------------------------
     faults: "FaultConfig | None" = None
+    # -- virtual population (None = enumerated devices) ----------------------
+    population: "PopulationConfig | None" = None
 
     def validate(self) -> None:
         assert self.speed_dist in SPEED_DISTS, \
@@ -322,6 +369,11 @@ class ScenarioConfig:
         assert 0.0 <= self.move_prob <= 1.0
         if self.faults is not None:
             self.faults.validate()
+        if self.population is not None:
+            self.population.validate()
+            assert self.faults is None or self.faults.trivial, \
+                "fault injection is not supported with a virtual " \
+                "population (FaultModel realizes per enumerated device)"
 
     @property
     def trivial(self) -> bool:
@@ -330,7 +382,8 @@ class ScenarioConfig:
         masked schedule must reduce to the static operators."""
         return (self.sample_fraction >= 1.0 and self.dropout_prob == 0.0
                 and self.move_prob == 0.0
-                and (self.faults is None or self.faults.trivial))
+                and (self.faults is None or self.faults.trivial)
+                and self.population is None)
 
 
 # ---------------------------------------------------------------------------

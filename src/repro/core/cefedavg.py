@@ -48,8 +48,9 @@ import numpy as np
 from repro.config import FLConfig
 from repro.core import program as prg
 from repro.core import topology as topo
-from repro.core.modelbank import ModelBank, cohort_buckets, compact_plan
-from repro.kernels.gossip_mix import gossip_mix_rows
+from repro.core.modelbank import (ModelBank, bucket_for, cohort_buckets,
+                                  compact_plan)
+from repro.kernels.gossip_mix import FlatLayout, gossip_mix_rows
 
 
 @dataclass
@@ -144,13 +145,26 @@ class FLSimulator:
     bank: True (default) runs the flat ModelBank engine; False the legacy
           per-leaf pytree engine (parity/debug escape hatch). ``params``,
           ``mom`` and ``residual`` read/write as pytrees in both modes.
+    streaming: True pages client state through a
+          :class:`repro.core.clientstore.ClientStore` instead of a
+          resident (n, T) bank — only each round's working set (cohort
+          + one cold representative per cluster) is materialized as the
+          hot slab. Implied (and required) when the scenario carries a
+          ``PopulationConfig``; at enumerated n it reproduces the
+          resident trajectory to float tolerance (the gemm shapes — and
+          so the fp summation order — of the restricted operators
+          differ; everything keyed is identical).
+    codec: cold-row codec for the streamed store ("f32"/"f16"/"int8");
+          a population scenario's ``PopulationConfig.codec`` wins.
     """
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl: FLConfig,
                  data: Dict[str, Any], *, lr: float = 0.05,
                  momentum: float = 0.9, batch_size: int = 50, seed: int = 0,
                  compression=None, dp=None, scenario=None, schedule=None,
-                 bank: bool = True):
+                 bank: bool = True, streaming: bool = False,
+                 codec: str = "f32", store_shards: int = 1,
+                 slab_sharding=None, min_bucket: int = 1):
         self.fl = fl
         self.apply_fn = apply_fn
         self.sched = make_w_schedule(fl)
@@ -161,8 +175,16 @@ class FLSimulator:
         self.compression = compression  # core.compress.CompressionConfig
         self.dp = dp                    # core.privacy.DPConfig
         # wall-clock scenario (config.ScenarioConfig): per-round sampling,
-        # mobility and heterogeneity — None keeps the static schedule
-        if scenario is not None:
+        # mobility and heterogeneity — None keeps the static schedule. A
+        # scenario with a PopulationConfig swaps in the PopulationEngine
+        # (virtual clients, keyed cohort draws) and forces streaming.
+        self.pop = None
+        if scenario is not None and scenario.population is not None:
+            from repro.core.scenario import PopulationEngine
+            self.engine = PopulationEngine(scenario, fl)
+            self.pop = self.engine
+            streaming = True
+        elif scenario is not None:
             from repro.core.scenario import ScenarioEngine
             self.engine = ScenarioEngine(scenario, fl)
         else:
@@ -177,12 +199,45 @@ class FLSimulator:
         # we use one shared init (common FL practice), so params are
         # cluster-uniform from the start.
         one = init_fn(jax.random.PRNGKey(seed))
+        self._layout = FlatLayout.for_tree(one)
         self.bank: Optional[ModelBank] = None
+        self.store = None  # clientstore.ClientStore (streamed mode only)
+        self._streamed = bool(streaming)
         # cohort compaction gathers bank rows into a dense (k_pad, T) slab;
         # the sharded engine (core.sharded.ShardedBankCEFedAvg) pins rows
         # to devices and disables it, running mask-frozen full rows instead
         self._compact_enabled = True
-        if bank:
+        if self._streamed:
+            assert bank, "the streaming client store is a bank engine"
+            assert compression is None and dp is None, \
+                "streamed rounds run plain programs (no upload transforms)"
+            assert fl.algorithm != "dec_local_sgd", \
+                "dec_local_sgd ties devices to clusters (n == m) — " \
+                "no cold rows to stream"
+            from repro.core.clientstore import ClientStore
+            if self.pop is not None:
+                codec = scenario.population.codec
+            self.store = ClientStore(
+                self._layout, fl.num_clusters,
+                np.asarray(self._layout.flatten_one(one), np.float32),
+                codec=codec, num_shards=store_shards)
+            self._slab_sharding = slab_sharding
+            # slab capacity: the cohort cap plus one representative per
+            # cluster, bucketed like compaction (power-of-two retrace
+            # bound); min_bucket keeps every bucket divisible by the
+            # sharded engine's row-shard count
+            cap = (self.engine.cohort_cap if self.pop is not None
+                   else n + fl.num_clusters)
+            cap = -(-max(cap, min_bucket) // min_bucket) * min_bucket
+            self._buckets = tuple(
+                b for b in cohort_buckets(cap) if b % min_bucket == 0)
+            # params of a cold client = its cluster's reference at its
+            # LAST sync — track each enumerated device's label as of the
+            # previous round's trailing boundary (page-in value source)
+            self._page_labels = self.labels.copy()
+            self._peak_slab = 0
+            self.last_paging = None
+        elif bank:
             self.bank = self._make_bank(one, n, with_residual)
             self._buckets = cohort_buckets(n)
         else:
@@ -214,6 +269,11 @@ class FLSimulator:
             self._schedule_fn = _fixed
         else:
             self._schedule_fn = schedule
+        if self.pop is not None:
+            assert schedule is None, \
+                "round schedules are not supported with a virtual " \
+                "population (tau_dev/speed vectors are per enumerated " \
+                "device)"
         self.round_index = 0
         self.last_program: Optional[prg.RoundProgram] = None
         self._lowered: Dict = {}       # (engine kind, signature) -> jitted
@@ -240,6 +300,10 @@ class FLSimulator:
         of the flat (n, T) buffer (fresh arrays, safe across rounds)."""
         if self.bank is not None:
             return self.bank.params_tree()
+        if self._streamed:
+            raise AttributeError(
+                "the streamed engine keeps no resident per-client "
+                "params — read sim.store.cluster_params / edge_models()")
         return self._params
 
     @params.setter
@@ -254,6 +318,10 @@ class FLSimulator:
         """Device-stacked momentum pytree (see ``params``)."""
         if self.bank is not None:
             return self.bank.layout.unflatten_stack(self.bank.mom)
+        if self._streamed:
+            raise AttributeError(
+                "the streamed engine keeps no resident momentum — "
+                "cold rows live in sim.store")
         return self._mom
 
     @mom.setter
@@ -271,6 +339,8 @@ class FLSimulator:
             if self.bank.residual is None:
                 return None
             return self.bank.layout.unflatten_stack(self.bank.residual)
+        if self._streamed:
+            return None  # streamed rounds reject upload/EF programs
         return self._residual
 
     @residual.setter
@@ -411,19 +481,24 @@ class FLSimulator:
         closure materializes pytree views only inside the apply call."""
         n = self.sched.n
         N = self.data["xs"].shape[1]
-        layout = self.bank.layout
+        layout = self._layout
 
         def loss_row(row, x, y):
             return self._loss(layout.unflatten_one(row), x, y)
         grad_row = jax.grad(loss_row)
 
         def make_local_step(xs, ys, act2d, gather=None, tau_dev=None,
-                            lr_scale=1.0):
+                            lr_scale=1.0, fold_ids=None):
             """One SGD+momentum step on a (rows, T) slab. ``gather``
             (compaction) maps the full-n batch-index draw onto the slab's
             rows so the cohort sees the same batches as the full path;
-            ``tau_dev`` (adaptive programs) freezes each row past its
-            per-device step cutoff."""
+            ``fold_ids`` (virtual populations, streamed rounds) instead
+            draws each row's batch from the step key folded with its
+            client id — O(rows) draws independent of the population
+            size, and a client redrawn in a later round with the same
+            key would see the same batches regardless of cohort
+            composition; ``tau_dev`` (adaptive programs) freezes each
+            row past its per-device step cutoff."""
             lr = self.lr * lr_scale
 
             def local_step(carry, xs_):
@@ -433,9 +508,14 @@ class FLSimulator:
                 else:
                     key, act = xs_, act2d
                 Y, M = carry
-                idx = jax.random.randint(key, (n, self.batch), 0, N)
-                if gather is not None:
-                    idx = idx[gather]
+                if fold_ids is not None:
+                    idx = jax.vmap(lambda i: jax.random.randint(
+                        jax.random.fold_in(key, i),
+                        (self.batch,), 0, N))(fold_ids)
+                else:
+                    idx = jax.random.randint(key, (n, self.batch), 0, N)
+                    if gather is not None:
+                        idx = idx[gather]
                 xb = jax.vmap(lambda x, i: x[i])(xs, idx)
                 yb = jax.vmap(lambda y, i: y[i])(ys, idx)
                 G = jax.vmap(grad_row)(Y, xb, yb)
@@ -476,7 +556,7 @@ class FLSimulator:
         comp, dp = self.compression, self.dp
         xs, ys = self.data["xs"], self.data["ys"]
         make_local_step = self._flat_helpers()
-        segments = self.bank.layout.segments
+        segments = self._layout.segments
         plans = prg.lowering_plan(program, fuse=True)
         runs = prg.block_runs(plans)
         nblocks = len(plans)
@@ -600,6 +680,72 @@ class FLSimulator:
 
         return compact_round
 
+    def _lower_streamed(self, program: prg.RoundProgram,
+                        per_client: bool = False):
+        """Compile a RoundProgram to the streamed working-set round
+        (ISSUE 9): ALL state is the hot (S, T) slab — the paged-in
+        cohort plus one cold representative lane per cluster — and the
+        mixing operators arrive already restricted to the working set
+        (exact, because every masked operator row reads participant
+        columns only and is a function of the row's cluster label).
+        ``didx`` maps each lane to its data shard, ``cids`` carries the
+        lane's virtual client id, ``lane`` marks the trainers (cold
+        representative/padding lanes are ``where``-frozen and only
+        mixed). ``per_client`` switches the batch draw from the
+        enumerated-n gather (bitwise parity with the compacted resident
+        round) to the fold_in(client id) schedule of virtual
+        populations. Traced once per slab bucket."""
+        xs = jnp.asarray(self.data["xs"])
+        ys = jnp.asarray(self.data["ys"])
+        make_local_step = self._flat_helpers()
+        plans = prg.lowering_plan(program, fuse=True)
+        runs = prg.block_runs(plans)
+        nblocks = len(plans)
+        assert not program.has_upload, \
+            "streamed rounds are for plain programs only"
+        assert plans[-1].groups, \
+            "streamed rounds need a trailing mixing boundary (page-out " \
+            "reads cluster-synced rows back as the references)"
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def streamed_round(Y, M, key, didx, cids, lane, args):
+            lane2d = lane[:, None]
+            xs_c, ys_c = xs[didx], ys[didx]
+            tau_c = (None if args.tau_dev is None else args.tau_dev[didx])
+
+            def train_slab(carry, k1, op):
+                Y, M = carry
+                local_step = make_local_step(
+                    xs_c, ys_c, lane2d,
+                    gather=None if per_client else didx,
+                    fold_ids=cids if per_client else None,
+                    tau_dev=tau_c if op.adaptive else None,
+                    lr_scale=op.lr_scale)
+                return self._train_scan(local_step, Y, M, k1, op)
+
+            keys = jax.random.split(key, nblocks)
+            mi = ki = 0
+            for bp, count in runs:
+                gm = args.mats[mi:mi + len(bp.groups)]
+                mi += len(bp.groups)
+                bkeys = keys[ki:ki + count]
+                ki += count
+
+                def one(carry, k1, bp=bp, gm=gm):
+                    Y, M = train_slab(carry, k1, bp.local)
+                    for W in gm:
+                        Y = gossip_mix_rows(W, Y)
+                    return Y, M
+                if count > 1:
+                    def body(carry, k1, one=one):
+                        return one(carry, k1), None
+                    (Y, M), _ = jax.lax.scan(body, (Y, M), bkeys)
+                else:
+                    Y, M = one((Y, M), bkeys[0])
+            return Y, M
+
+        return streamed_round
+
     # -- per-round program machinery ----------------------------------------
     def _get_round(self, kind: str, program: prg.RoundProgram):
         """The jitted lowering of ``program`` for one engine, compiled
@@ -611,7 +757,10 @@ class FLSimulator:
                      "flat": self._lower_flat,
                      "flat_block": functools.partial(self._lower_flat,
                                                      block_keyed=True),
-                     "compact": self._lower_compact}[kind]
+                     "compact": self._lower_compact,
+                     "streamed": self._lower_streamed,
+                     "streamed_pop": functools.partial(
+                         self._lower_streamed, per_client=True)}[kind]
             fn = lower(program)
             self._lowered[key] = fn
         return fn
@@ -656,8 +805,8 @@ class FLSimulator:
             return make_masked_w(self.fl, plan.labels, plan.mask,
                                  self._scenario_h(plan), pi=pi)[1]
         return make_masked_w(self.fl, plan.labels,
-                             np.ones(self.sched.n), self._scenario_h(plan),
-                             pi=pi)[1]
+                             np.ones(plan.labels.shape[0]),
+                             self._scenario_h(plan), pi=pi)[1]
 
     def _tier_operator(self, op: prg.TierMix, plan, renorm: bool):
         """The (n, n) dense operator of any ``TierMix`` this round.
@@ -681,7 +830,7 @@ class FLSimulator:
                 return plan.W_intra
             from repro.core.scenario import make_masked_w
             return make_masked_w(self.fl, plan.labels,
-                                 np.ones(self.sched.n),
+                                 np.ones(plan.labels.shape[0]),
                                  self._scenario_h(plan))[0]
         if op.level == 1:
             return self._inter_operator(op.pi, plan, renorm)
@@ -745,7 +894,7 @@ class FLSimulator:
             else:
                 from repro.core.scenario import make_masked_w
                 W_intra = make_masked_w(self.fl, plan.labels,
-                                        np.ones(self.sched.n),
+                                        np.ones(plan.labels.shape[0]),
                                         self._scenario_h(plan))[0]
             mats = tuple(jnp.asarray(m) for m in prg.resolve_matrices(
                 plans, gate(W_intra),
@@ -771,6 +920,8 @@ class FLSimulator:
         scenario); ``last_program`` records the executed program so
         callers — e.g. the wall-clock harness in core/clock.py — can
         charge the cohort per op."""
+        if self._streamed:
+            return self._step_round_streamed()
         if self.engine is not None:
             plan = self.engine.step()
             self.labels = plan.labels
@@ -812,6 +963,154 @@ class FLSimulator:
                                          args, mask)
         return plan
 
+    def _step_round_streamed(self):
+        """One streamed global round: page in the working set, run the
+        slab-restricted program, page out (ISSUE 9).
+
+        The working set is the round's cohort plus one cold
+        representative lane per cluster; its params page in from the
+        store's per-cluster references (each lane reads the reference
+        of its cluster *at its last sync* — tracked by ``_page_labels``
+        at enumerated n, the current attachment with a virtual
+        population, where attaching IS downloading the edge's model),
+        its momentum from the cold rows (zeros on first touch). After
+        the round the trailing cluster-level boundary has synced every
+        lane of a cluster to one value, so page-out reads one lane per
+        cluster back as its reference (skipping fault-dark clusters,
+        whose gated rows never mixed) and re-encodes the cohort's
+        momentum. Known, documented approximations vs the resident
+        engine: a cluster left without any working-set lane (possible
+        only under visit mobility + full sampling) keeps a stale
+        reference for the round."""
+        from repro.core.modelbank import ModelBank as MB
+        st = self.store
+        m = self.fl.num_clusters
+        if self.engine is not None:
+            plan = self.engine.step()
+        else:
+            plan = None
+        r = self.round_index
+        self.round_index += 1
+        program = (self._schedule_fn(r, plan)
+                   if self._schedule_fn is not None else self._canonical)
+        self.last_program = program
+        assert not program.has_upload, \
+            "streamed rounds reject upload programs (EF residual and " \
+            "DP noise are per-device state the store does not page)"
+        assert program.mask_renorm, \
+            "streamed rounds need mask-renormalized operators — " \
+            "unrenormalized rows weight absent cold members"
+        fault = getattr(plan, "fault", None)
+        if self.pop is not None:
+            # virtual population: cohort ids from the keyed engine, one
+            # cold representative per (not fully sampled) cluster; a
+            # lane's data shard is its id mod the enumerated shard count
+            cohort = np.asarray(plan.clients, np.int64)
+            reps = self.engine.representatives(cohort)
+            clients = np.concatenate([cohort, reps])
+            ws_labels = np.concatenate(
+                [np.asarray(plan.labels, np.int64),
+                 self.engine.home_cluster(reps)])
+            src_labels = ws_labels
+            didx = clients % self.data["xs"].shape[0]
+            h_eff = None
+        else:
+            # enumerated n: the scenario plan's cohort (or everyone)
+            if plan is not None:
+                labels_now = np.asarray(plan.labels, np.int64)
+                mask_np = np.asarray(plan.mask)
+                h_eff = plan.H_eff
+            else:
+                labels_now = self.labels
+                mask_np = np.ones(self.sched.n)
+                h_eff = None
+            cold = mask_np <= 0
+            cohort = np.nonzero(~cold)[0].astype(np.int64)
+            reps = np.asarray(
+                [np.nonzero(cold & (labels_now == c))[0][0]
+                 for c in range(m)
+                 if (cold & (labels_now == c)).any()], np.int64)
+            clients = np.concatenate([cohort, reps])
+            ws_labels = labels_now[clients]
+            src_labels = self._page_labels[clients]
+            didx = clients
+            self.labels = labels_now
+        k = int(cohort.shape[0])
+        S_raw = int(clients.shape[0])
+        S = bucket_for(S_raw, self._buckets)
+        pad = S - S_raw
+        if pad:
+            # padding duplicates lane 0 wholesale (client id, labels,
+            # data shard) with lane=False: a frozen extra cold member of
+            # lane 0's cluster, whose post-round row is that cluster's
+            # synced value — safe even as a page-out read
+            clients = np.concatenate([clients, np.repeat(clients[:1], pad)])
+            ws_labels = np.concatenate(
+                [ws_labels, np.repeat(ws_labels[:1], pad)])
+            src_labels = np.concatenate(
+                [src_labels, np.repeat(src_labels[:1], pad)])
+            didx = np.concatenate([didx, np.repeat(didx[:1], pad)])
+        lane = np.zeros(S, bool)
+        lane[:k] = True
+        mask_slab = lane.astype(float)
+        H_t = self._scenario_h(plan)
+        from repro.core.scenario import RoundPlan, make_masked_w
+        W_i, W_e = make_masked_w(self.fl, ws_labels, mask_slab, H_t)
+        splan = RoundPlan(r, m, ws_labels, mask_slab, W_i, W_e,
+                          fault=fault, H_eff=h_eff)
+        args = self._resolve_args(program, splan, fuse=True)
+        # page-in: params from each lane's last-sync cluster reference,
+        # momentum decoded for the trainers only (cold lanes never step)
+        params_rows = st.cluster_params[src_labels]
+        mom_rows = np.zeros((S, self._layout.total), np.float32)
+        if k:
+            mom_rows[:k] = st.fetch(clients[:k])
+        slab = MB.from_rows(self._layout, params_rows, mom_rows,
+                            sharding=self._slab_sharding)
+        self.key, k_ = jax.random.split(self.key)
+        fn = self._get_round(
+            "streamed_pop" if self.pop is not None else "streamed",
+            program)
+        Y, M = fn(slab.params, slab.mom, k_,
+                  jnp.asarray(didx, jnp.int32),
+                  jnp.asarray(clients, jnp.int32),
+                  jnp.asarray(lane), args)
+        Yh = np.asarray(jax.device_get(Y), np.float32)
+        Mh = np.asarray(jax.device_get(M), np.float32)
+        # page-out: last lane of each cluster (representatives win over
+        # participants by position) carries the synced reference
+        ref_lane = np.full(m, -1, np.int64)
+        ref_lane[ws_labels] = np.arange(S)
+        down = (fault.cluster_down if fault is not None else None)
+        refs = st.cluster_params.copy()
+        for c in range(m):
+            j = int(ref_lane[c])
+            if j < 0 or (down is not None and down[c]):
+                continue  # no working-set lane / dark cluster: stale ref
+            refs[c] = Yh[j]
+        st.update_clusters(refs)
+        if k:
+            st.commit(clients[:k], Mh[:k])
+        if self.pop is None:
+            # next round's page-in reads the reference of the cluster a
+            # device sat in NOW: the trailing boundary synced every row
+            self._page_labels = self.labels.copy()
+        self.last_bucket = S
+        self._peak_slab = max(self._peak_slab,
+                              2 * 4 * S * self._layout.total)
+        # paging = device↔edge traffic: each trainer downloads its row
+        # and uploads it back (references live at the edge already)
+        self.last_paging = {"rows_in": k, "rows_out": k,
+                            "bits_per_row": st.bits_per_row}
+        return plan
+
+    @property
+    def peak_slab_bytes(self) -> int:
+        """Largest hot slab (params + momentum) any streamed round
+        materialized — the O(cohort) resident bound the scale bench
+        guards; 0 before the first round / for resident engines."""
+        return int(getattr(self, "_peak_slab", 0))
+
     def step_round_async(self, staleness: int, rt, *,
                          uplink_ratio: float = 1.0):
         """Advance ONE global round in async bounded-staleness mode.
@@ -841,6 +1140,9 @@ class FLSimulator:
         timeline, the staleness bound, the cumulative per-cluster phase
         vector, and a per-event trace (pre-advance phases + realized
         cross-cluster gossip edges of the masked operator)."""
+        assert not self._streamed, \
+            "async bounded-staleness execution needs resident rows " \
+            "(blocks replay against the full bank, not a paged slab)"
         assert self.bank is not None, \
             "async bounded-staleness execution requires a bank engine"
         from repro.core import clock as clk
@@ -934,6 +1236,10 @@ class FLSimulator:
         Uses the CURRENT assignment B_t (mobility moves devices between
         clusters, so membership is re-read every call). In bank mode the
         (m, n) projection streams the flat bank once."""
+        if self._streamed:
+            # the streamed store's per-cluster references ARE y_t
+            return self._layout.unflatten_stack(
+                jnp.asarray(self.store.cluster_params))
         B = topo.assignment_matrix(self.labels, self.fl.num_clusters)
         P = topo.masked_cluster_average(B)
         if self.bank is not None:
@@ -944,6 +1250,18 @@ class FLSimulator:
 
     def global_model(self):
         """Device-average model x̄ as a single pytree."""
+        if self._streamed:
+            # end-of-round rows are cluster-uniform, so the device
+            # average is the cluster-size-weighted reference average
+            sizes = (self.pop.sizes.astype(np.float64)
+                     if self.pop is not None
+                     else np.bincount(self.labels,
+                                      minlength=self.fl.num_clusters)
+                     .astype(np.float64))
+            w = sizes / sizes.sum()
+            row = (np.asarray(self.store.cluster_params, np.float64)
+                   * w[:, None]).sum(0).astype(np.float32)
+            return self._layout.unflatten_one(jnp.asarray(row))
         if self.bank is not None:
             return self.bank.mean_model()
         return jax.tree.map(lambda l: jnp.mean(l, 0), self._params)

@@ -1,0 +1,206 @@
+"""Streaming client-state store: O(cohort) resident memory at n≈10⁵.
+
+The flat ModelBank (``core/modelbank.py``) materializes every client as
+a hot ``(n, T)`` row, so memory and init cost grow with the population
+even though cohort compaction already made per-round *compute*
+O(cohort). The :class:`ClientStore` breaks that last O(n) dependence:
+per round only the sampled cohort's rows are materialized as the hot
+``(k_pad, T)`` slab (``ModelBank.from_rows``), while cold state lives
+here — host-side, compressed under a ``core/compress.py`` cold codec —
+and is paged in/out at round boundaries.
+
+Why the cold store is small — what per-client state actually exists
+-------------------------------------------------------------------
+
+Every supported round program ends in a cluster-level mixing boundary
+(the qτ-boundary of eq. 11, or its Hier-FAvg/FedAvg/Local-Edge
+reductions), and every masked operator row is a function of the row's
+cluster label only. So at the end of a round, **every member of a
+cluster holds the identical synced value** — per-client params would be
+n duplicates of an (m, T) table. The store therefore keeps:
+
+- ``cluster_params`` — the (m, T) per-cluster reference models (what a
+  cold client's row *is*);
+- encoded **momentum** rows of ever-sampled clients only, lazily: a
+  never-sampled client's momentum is exactly zero (momentum is never
+  mixed, and ``where``-frozen while a client sits out), so it needs no
+  bytes at all.
+
+Page-in builds each working-set lane from ``cluster_params[label]``
+plus its decoded momentum (zeros on first touch); page-out reads each
+cluster's synced row back into ``cluster_params`` and re-encodes the
+cohort's momentum. With the default lossless ``f32`` codec the
+page-out/page-in round trip is bit-exact, which is what makes
+killed-and-resumed streamed runs bit-identical (``RunCheckpoint``
+snapshots :meth:`ClientStore.snapshot` under fixed keys).
+
+Sharding: the store partitions client rows ``client_id % num_shards``
+into independent per-shard maps, so the sharded engine
+(``core/sharded.py``) keeps one cold shard per bank shard and no single
+host map ever holds the whole population's rows.
+
+Resident-memory formula (doctested in docs/PERFORMANCE.md):
+
+>>> resident_slab_nbytes(16, 1000)   # 16-lane slab, T=1000 params
+128000
+>>> cold_row_nbytes(1000, "int8", 4)  # 4-segment layout: q + scales
+1016
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.compress import (COLD_CODECS, cold_bits_per_param,
+                                 cold_dtype, decode_cold_rows,
+                                 encode_cold_rows)
+
+
+def resident_slab_nbytes(k_pad: int, total: int) -> int:
+    """Peak resident hot-slab bytes of one streamed round: params +
+    momentum at ``(k_pad, T)`` float32 — a function of the *cohort
+    bucket*, never of the population size.
+
+    >>> resident_slab_nbytes(8, 100)
+    6400
+    """
+    return 2 * 4 * int(k_pad) * int(total)
+
+
+def cold_row_nbytes(total: int, codec: str, num_segments: int) -> int:
+    """Host cold-store bytes of one stored client row: ``T`` params at
+    the codec's width, plus one float32 affine scale per FlatLayout
+    segment for ``int8``.
+
+    >>> cold_row_nbytes(100, "f32", 4)
+    400
+    >>> cold_row_nbytes(100, "f16", 4)
+    200
+    >>> cold_row_nbytes(100, "int8", 4)
+    116
+    """
+    per = cold_bits_per_param(codec) // 8
+    scales = 4 * num_segments if codec == "int8" else 0
+    return per * int(total) + scales
+
+
+class ClientStore:
+    """Compressed host store of cold client state behind the hot slab.
+
+    ``layout`` is the model's FlatLayout; ``init_row`` the shared-init
+    flat row (Algorithm 1's common y_{0,0}); ``codec`` one of
+    ``compress.COLD_CODECS``. Rows are partitioned
+    ``client_id % num_shards`` so a sharded engine keeps per-shard cold
+    stores (``num_shards=1`` for the single-process engine)."""
+
+    def __init__(self, layout, num_clusters: int, init_row: np.ndarray,
+                 *, codec: str = "f32", num_shards: int = 1):
+        assert codec in COLD_CODECS, codec
+        assert num_shards >= 1
+        self.layout = layout
+        self.m = int(num_clusters)
+        self.codec = codec
+        self.num_shards = int(num_shards)
+        row = np.asarray(init_row, np.float32).reshape(-1)
+        assert row.shape[0] == layout.total, (row.shape, layout.total)
+        #: (m, T) per-cluster reference params — a cold client's row IS
+        #: its cluster's reference (see module docstring)
+        self.cluster_params = np.tile(row[None, :], (self.m, 1))
+        # per-shard maps: client_id -> (encoded q row, scale row)
+        self._shards: List[Dict[int, tuple]] = [
+            dict() for _ in range(self.num_shards)]
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def num_stored(self) -> int:
+        """Clients with a materialized (ever-sampled) momentum row."""
+        return sum(len(s) for s in self._shards)
+
+    @property
+    def bits_per_row(self) -> int:
+        """Paged bits per client row — what ``clock.paging_comm_time``
+        charges each page-in/page-out row of device↔edge traffic."""
+        return 8 * cold_row_nbytes(self.layout.total, self.codec,
+                                   len(self.layout.segments))
+
+    def shard_nbytes(self) -> List[int]:
+        """Cold bytes held per shard (stored rows only)."""
+        per = cold_row_nbytes(self.layout.total, self.codec,
+                              len(self.layout.segments))
+        return [per * len(s) for s in self._shards]
+
+    @property
+    def nbytes(self) -> int:
+        """Total host bytes: cluster references + stored cold rows."""
+        return int(self.cluster_params.nbytes) + sum(self.shard_nbytes())
+
+    # -- paging --------------------------------------------------------------
+    def fetch(self, clients: np.ndarray) -> np.ndarray:
+        """Decode the momentum rows of ``clients`` as (k, T) float32.
+        Never-stored clients decode to zeros (their exact momentum)."""
+        ids = np.asarray(clients, np.int64).reshape(-1)
+        out = np.zeros((ids.shape[0], self.layout.total), np.float32)
+        hit, qs, scales = [], [], []
+        for j, i in enumerate(ids):
+            row = self._shards[int(i) % self.num_shards].get(int(i))
+            if row is not None:
+                hit.append(j)
+                qs.append(row[0])
+                scales.append(row[1])
+        if hit:
+            enc = {"q": np.stack(qs), "scale": np.stack(scales)}
+            out[hit] = decode_cold_rows(enc, self.codec,
+                                        self.layout.segments)
+        return out
+
+    def commit(self, clients: np.ndarray, rows: np.ndarray) -> None:
+        """Encode and store the momentum rows of ``clients`` (page-out).
+        Re-committing a client overwrites its previous row."""
+        ids = np.asarray(clients, np.int64).reshape(-1)
+        rows = np.asarray(rows, np.float32)
+        assert rows.shape == (ids.shape[0], self.layout.total)
+        enc = encode_cold_rows(rows, self.codec, self.layout.segments)
+        for j, i in enumerate(ids):
+            self._shards[int(i) % self.num_shards][int(i)] = (
+                enc["q"][j], enc["scale"][j])
+
+    def update_clusters(self, refs: np.ndarray) -> None:
+        """Replace the per-cluster reference params (page-out)."""
+        refs = np.asarray(refs, np.float32)
+        assert refs.shape == self.cluster_params.shape
+        self.cluster_params = refs.copy()
+
+    # -- checkpoint edge -----------------------------------------------------
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        """Fixed-key host snapshot for ``RunCheckpoint``: stored rows
+        stay *encoded*, so a save/restore round trip reproduces the
+        identical cold bytes under every codec (no re-quantization)."""
+        ids = sorted(i for s in self._shards for i in s)
+        T, nseg = self.layout.total, len(self.layout.segments)
+        dt = cold_dtype(self.codec)
+        if ids:
+            rows = [self._shards[i % self.num_shards][i] for i in ids]
+            q = np.stack([r[0] for r in rows]).astype(dt)
+            scale = np.stack([r[1] for r in rows]).astype(np.float32)
+        else:
+            q = np.zeros((0, T), dt)
+            scale = np.zeros((0, nseg if self.codec == "int8" else 0),
+                             np.float32)
+        return {"cluster": self.cluster_params.copy(),
+                "ids": np.asarray(ids, np.int64),
+                "mom_q": q, "mom_scale": scale}
+
+    def load(self, state: Dict[str, np.ndarray]) -> None:
+        """Restore :meth:`snapshot` output (mirror of ``_assign``)."""
+        cluster = np.asarray(state["cluster"], np.float32)
+        assert cluster.shape == self.cluster_params.shape, \
+            (cluster.shape, self.cluster_params.shape)
+        self.cluster_params = cluster.copy()
+        self._shards = [dict() for _ in range(self.num_shards)]
+        ids = np.asarray(state["ids"], np.int64)
+        q = np.asarray(state["mom_q"])
+        scale = np.asarray(state["mom_scale"], np.float32)
+        for j, i in enumerate(ids):
+            self._shards[int(i) % self.num_shards][int(i)] = (
+                q[j], scale[j])

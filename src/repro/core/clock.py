@@ -205,6 +205,20 @@ def block_comm_times(rt: RuntimeModel, algorithm: str,
     return out
 
 
+def paging_comm_time(rt: RuntimeModel, rows_in: int, rows_out: int,
+                     bits_per_row: int) -> float:
+    """Communication seconds of one streamed round's client paging
+    (``core/clientstore.py``): every paged-in row is a device→edge
+    *download* of the client's model and every paged-out row the
+    matching upload, both over the d2e link — the attach/detach traffic
+    a virtual-population round adds on top of its program's §6.1 terms.
+    Cold-codec compression (``PopulationConfig.codec``) shrinks
+    ``bits_per_row`` and therefore this charge, the same lever as
+    uplink compression on qW/b_d2e."""
+    return float((int(rows_in) + int(rows_out)) * int(bits_per_row)
+                 / rt.hw.b_d2e)
+
+
 # ---------------------------------------------------------------------------
 # async bounded-staleness timelines
 # ---------------------------------------------------------------------------
@@ -530,6 +544,14 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
             t = clock.charge_round(speeds, uplink_ratio)
         # straggler faults: price the retry ladder of timed-out devices
         # on top of the cohort's compute charge
+        # streamed rounds page client state through the edge — charge
+        # the page-in/page-out rows as d2e traffic
+        paging = getattr(sim, "last_paging", None)
+        if paging is not None:
+            clock.now += paging_comm_time(rt, paging["rows_in"],
+                                          paging["rows_out"],
+                                          paging["bits_per_row"])
+            t = clock.now
         fault = getattr(plan, "fault", None)
         if program is not None and fault is not None:
             fc = sim.engine.sc.faults

@@ -95,6 +95,40 @@ class ModelBank:
                          if with_residual else None)
         return self
 
+    @classmethod
+    def from_rows(cls, layout: FlatLayout, params_rows: np.ndarray,
+                  mom_rows: np.ndarray, *, sharding=None) -> "ModelBank":
+        """Wrap host-paged (S, T) rows as a hot slab bank (the streamed
+        engine's per-round working set, ``core/clientstore.py``). With a
+        ``sharding``, rows are placed per-shard via
+        ``jax.make_array_from_callback`` so no single device ever holds
+        the whole slab."""
+        params_rows = np.asarray(params_rows, np.float32)
+        mom_rows = np.asarray(mom_rows, np.float32)
+        S, T = params_rows.shape
+        assert T == layout.total and mom_rows.shape == (S, T)
+        self = cls.__new__(cls)
+        self.layout = layout
+        self.n = S
+        if sharding is None:
+            self.params = jnp.asarray(params_rows)
+            self.mom = jnp.asarray(mom_rows)
+        else:
+            self.params = jax.make_array_from_callback(
+                (S, T), sharding, lambda idx: params_rows[idx])
+            self.mom = jax.make_array_from_callback(
+                (S, T), sharding, lambda idx: mom_rows[idx])
+        self.residual = None
+        return self
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Accelerator-resident bytes of the bank's buffers."""
+        total = self.params.nbytes + self.mom.nbytes
+        if self.residual is not None:
+            total += self.residual.nbytes
+        return int(total)
+
     def load_rows(self, params: np.ndarray, mom: np.ndarray,
                   residual=None) -> None:
         """Overwrite the resident (n, T) buffers from host arrays via

@@ -616,6 +616,57 @@ class ShardedBankCEFedAvg(FLSimulator):
 
 
 # ---------------------------------------------------------------------------
+# sharded streamed engine: row-sharded hot slab over a virtual population
+# ---------------------------------------------------------------------------
+
+class ShardedStreamedBank(FLSimulator):
+    """Streamed client-store engine (ISSUE 9) with the per-round hot
+    slab row-sharded over the mesh's replica axes.
+
+    Where :class:`ShardedBankCEFedAvg` pins one *enumerated* device row
+    per mesh device for the whole run, this engine scales past
+    enumeration: the population lives in per-shard cold stores
+    (``client_id % R`` routing, one :class:`~repro.core.clientstore.
+    ClientStore` shard per bank shard) and only each round's working
+    set — cohort + one representative lane per cluster — exists on the
+    accelerators, as an ``(S, T)`` slab placed per-shard via
+    ``ModelBank.from_rows(..., sharding=...)`` so no single device ever
+    holds the whole working set. ``min_bucket = R`` keeps every slab
+    bucket divisible by the shard count (even row shards).
+
+    The slab round itself is the ordinary ``_lower_streamed`` lowering:
+    mixing is a cohort-sized ``(S, S)·(S, T)`` contraction that GSPMD
+    partitions over the row shards — at streamed scale the slab, not
+    the population, bounds the communication, so no structured
+    collective path is needed. Requires a scenario carrying a
+    ``PopulationConfig`` (virtual clients are what make per-shard cold
+    stores meaningful)."""
+
+    def __init__(self, init_fn: Callable, apply_fn: Callable, fl, data,
+                 mesh: Mesh, **kw):
+        assert kw.pop("bank", True), \
+            "ShardedStreamedBank IS a bank engine"
+        scenario = kw.get("scenario")
+        assert scenario is not None and scenario.population is not None, \
+            "ShardedStreamedBank streams a virtual population " \
+            "(ScenarioConfig.population)"
+        self.mesh = mesh
+        raxes = col.replica_axis_names(mesh)
+        assert raxes, f"mesh {mesh.axis_names} has no replica axes"
+        R = col.flat_axis_size(mesh)
+        if "model" in mesh.axis_names:
+            assert mesh.shape["model"] == 1, \
+                "slab rows are not tensor-parallel (model axis must be 1)"
+        self._rspec = raxes if len(raxes) > 1 else raxes[0]
+        super().__init__(
+            init_fn, apply_fn, fl, data, bank=True,
+            slab_sharding=NamedSharding(mesh, P(self._rspec, None)),
+            store_shards=R, min_bucket=R, **kw)
+        assert self._streamed
+        self._compact_enabled = False
+
+
+# ---------------------------------------------------------------------------
 # serving (non-FL: global/edge model)
 # ---------------------------------------------------------------------------
 

@@ -102,6 +102,21 @@ def main(argv=None):
                          "separated branching factors root->leaf, e.g. "
                          "'2,2,2' = 2 regions x 2 edges x 2 devices; "
                          "overrides --clusters/--data-parallel geometry")
+    ap.add_argument("--population", type=int, default=0, metavar="N",
+                    help="stream a virtual population of N clients "
+                         "through the cold client store "
+                         "(core/clientstore.py) instead of enumerating "
+                         "devices: per-round resident memory is bounded "
+                         "by the cohort, not N — n~1e5 runs on a laptop "
+                         "(docs/PERFORMANCE.md, population scaling)")
+    ap.add_argument("--cohort", type=int, default=8, metavar="K",
+                    help="sampled clients per cluster per round with "
+                         "--population (before sample_fraction/dropout)")
+    ap.add_argument("--codec", choices=("f32", "f16", "int8"),
+                    default="f32",
+                    help="cold-row codec of the streamed client store "
+                         "(--population): f32 lossless, f16/int8 trade "
+                         "round-trip error for 2x/4x smaller cold rows")
     ap.add_argument("--multihost", action="store_true",
                     help="call jax.distributed.initialize before any "
                          "device use (real-cluster entry point; "
@@ -113,11 +128,17 @@ def main(argv=None):
     ap.add_argument("--num-processes", type=int, default=0)
     ap.add_argument("--process-id", type=int, default=-1)
     args = ap.parse_args(argv)
-    if args.engine != "bank" and (args.schedule != "static"
-                                  or args.scenario or args.hierarchy
-                                  or args.async_staleness >= 0
-                                  or args.faults or args.ckpt_dir
-                                  or args.resume):
+    if args.population:
+        if (args.schedule != "static" or args.hierarchy or args.faults
+                or args.async_staleness >= 0):
+            ap.error("--population supports --scenario/--ckpt-dir/"
+                     "--resume only (no schedules, hierarchies, faults "
+                     "or async rounds over a virtual population)")
+    elif args.engine != "bank" and (args.schedule != "static"
+                                    or args.scenario or args.hierarchy
+                                    or args.async_staleness >= 0
+                                    or args.faults or args.ckpt_dir
+                                    or args.resume):
         ap.error("--schedule/--scenario/--hierarchy/--async-staleness/"
                  "--faults/--ckpt-dir/--resume require --engine bank")
     if args.resume and not args.ckpt_dir:
@@ -130,6 +151,8 @@ def main(argv=None):
             num_processes=args.num_processes or None,
             process_id=args.process_id if args.process_id >= 0 else None)
 
+    if args.population:
+        return run_population_engine(args)
     if args.engine == "bank":
         return run_bank_engine(args)
 
@@ -187,6 +210,88 @@ def main(argv=None):
             save_checkpoint(args.ckpt, jax.device_get(gl),
                             {"arch": args.arch, "rounds": args.rounds})
             print(f"saved global model to {args.ckpt}")
+
+
+def run_population_engine(args):
+    """Drive the streamed client-store engine over a virtual population
+    of ``--population`` clients (ISSUE 9): only each round's cohort (+
+    one representative lane per cluster) is resident; cold state pages
+    through the compressed host store. With ``--data-parallel R > 1``
+    the hot slab is row-sharded over a replica mesh
+    (``core.sharded.ShardedStreamedBank``)."""
+    import dataclasses
+
+    from repro.checkpoint import RunCheckpoint
+    from repro.config import PopulationConfig
+    from repro.core.cefedavg import FLSimulator
+    from repro.core.clientstore import resident_slab_nbytes
+    from repro.core.scenario import get_scenario
+    from repro.data.federated import (build_fl_data, dirichlet_partition,
+                                      make_synthetic_classification)
+    from repro.models.cnn import apply_mlp_classifier, init_mlp_classifier
+
+    m = args.clusters or 4
+    # enumerated *data shards* (client_id mod n picks one) — a small
+    # constant; the population itself is never enumerated
+    n = m * 4
+    fl = FLConfig(algorithm=args.algorithm, num_clusters=m,
+                  devices_per_cluster=n // m, tau=args.tau, q=args.q,
+                  pi=args.pi, topology=args.topology,
+                  er_prob=args.er_prob)
+    x, y = make_synthetic_classification(1600, 16, 8, seed=0, noise=2.5)
+    tx, ty = make_synthetic_classification(400, 16, 8, seed=1, noise=2.5)
+    parts = dirichlet_partition(y, n, alpha=0.3, seed=0)
+    data = build_fl_data(x, y, parts, tx, ty, samples_per_device=64)
+    base = get_scenario(args.scenario) if args.scenario else \
+        get_scenario("sampled")
+    scenario = dataclasses.replace(
+        base, population=PopulationConfig(
+            clients_per_cluster=max(1, -(-args.population // m)),
+            cohort_per_cluster=args.cohort, codec=args.codec))
+    init = lambda k: init_mlp_classifier(k, 16, 32, 8)   # noqa: E731
+    if args.data_parallel > 1:
+        from repro.core.sharded import ShardedStreamedBank
+        from repro.launch.mesh import make_replica_mesh
+        assert args.model_parallel == 1, \
+            "slab rows are not tensor-parallel; use --model-parallel 1"
+        mesh = make_replica_mesh(args.data_parallel)
+        sim = ShardedStreamedBank(
+            init, apply_mlp_classifier, fl, data, mesh, lr=args.lr,
+            batch_size=args.batch, seed=0, scenario=scenario)
+    else:
+        sim = FLSimulator(
+            init, apply_mlp_classifier, fl, data, lr=args.lr,
+            batch_size=args.batch, seed=0, scenario=scenario)
+    eng = sim.engine
+    print(f"population engine: N={eng.population} virtual clients over "
+          f"m={m} clusters (codec={args.codec}), slab cap "
+          f"{max(sim._buckets)} rows x T={sim._layout.total} = "
+          f"{resident_slab_nbytes(max(sim._buckets), sim._layout.total)}"
+          f" B resident", flush=True)
+    rc = RunCheckpoint(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if args.resume and rc is not None and rc.exists():
+        meta = rc.restore(sim)
+        start = meta["round"]
+        print(f"resumed from {rc.path} at round {start}")
+    for r in range(start, args.rounds):
+        t0 = time.time()
+        plan = sim.step_round()
+        acc, loss = sim.evaluate(256)
+        print(f"round {r}: acc={acc:.3f} loss={loss:.4f} "
+              f"cohort={plan.clients.shape[0]} "
+              f"slab={sim.last_bucket} rows "
+              f"store={sim.store.nbytes / 1e6:.2f}MB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+        if rc is not None and (r + 1) % max(args.ckpt_every, 1) == 0:
+            rc.save(sim, round_idx=r + 1)
+    print(f"peak resident slab: {sim.peak_slab_bytes} B "
+          f"(population {eng.population}, cold store "
+          f"{sim.store.nbytes / 1e6:.2f}MB host)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, jax.device_get(sim.global_model()),
+                        {"engine": "streamed", "rounds": args.rounds})
+        print(f"saved global model to {args.ckpt}")
 
 
 def run_bank_engine(args):

@@ -23,7 +23,8 @@ def _rec(name, derived):
     return {"name": name, "us_per_call": 1.0, "derived": derived}
 
 
-def _smoke(speedup, ratio, async_ratio=0.97, fault_ratio=0.98):
+def _smoke(speedup, ratio, async_ratio=0.97, fault_ratio=0.98,
+           resident_ratio=1.0):
     return [
         _rec("kern_boundary_fused_femnist_cnn_n16",
              f"bank qt-boundary;speedup_vs_perleaf={speedup}x"),
@@ -33,6 +34,8 @@ def _smoke(speedup, ratio, async_ratio=0.97, fault_ratio=0.98):
              f"async/barrier_makespan={async_ratio};rounds=8"),
         _rec("faults_chaos_cefedavg",
              f"faulted/clean_final_acc={fault_ratio};rounds=6"),
+        _rec("scale_resident_ratio",
+             f"resident_n10k/n1k={resident_ratio};blurb"),
     ]
 
 
@@ -85,6 +88,15 @@ def test_fault_degradation_collapse_fails(baseline):
     failures, _ = check(_smoke(1.85, 1.39, fault_ratio=0.2),
                         baseline, 2.5)
     assert failures == ["faulted/clean_final_acc"]
+
+
+def test_resident_memory_growth_fails(baseline):
+    """The streamed store's peak resident slab growing with the
+    population (n=10^4 costing >2.5x the n=10^3 slab under the same
+    cohort config) must fail the O(cohort)-memory ceiling."""
+    failures, _ = check(_smoke(1.85, 1.39, resident_ratio=10.0),
+                        baseline, 2.5)
+    assert failures == ["resident_n10k/n1k"]
 
 
 def test_missing_record_is_an_error(baseline, tmp_path, capsys):
