@@ -79,6 +79,14 @@ CHECKS = (
     # only absorbs one slab-bucket power-of-two step.
     ("resident_n10k/n1k", ("scale_resident_ratio",),
      "scale_resident_ratio", "ceiling"),
+    # paging pipeline (ISSUE 10): the double-buffered driver vs the
+    # serial streamed oracle at n=10^4, median round time over
+    # alternately-stepped sims (host load drift cancels in the ratio).
+    # The pipelined driver strictly removes work from the round — host
+    # codec moved on device, f32 slabs off the link, params resident —
+    # so like the async makespan this is a hard cap: never above 1.0.
+    ("pipelined/serial_round_us", ("scale_pipelined_n10000",),
+     "scale_pipelined_n10000", "cap1"),
 )
 
 _NUM = r"([-+0-9.eE]+)"

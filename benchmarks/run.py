@@ -485,6 +485,66 @@ def scale(full=False, smoke=False):
         assert ratio <= 1.0 + 1e-9, (
             f"resident slab grew with population: {ratio:.4f}")
 
+    # -- paging pipeline (ISSUE 10): serial vs double-buffered driver.
+    # Config chosen so paging is the round, not a footnote: a wide MLP
+    # (64->2048->32, ~200k params/row) under the int8 codec with a
+    # small fixed cohort (3/cluster, full sampling, no dropout — one
+    # slab bucket, so no mid-measurement recompiles) and tau=q=pi=1.
+    # Per round the serial driver then pays host-side codec work plus
+    # 2 full-width f32 H2D slabs, which is exactly what the pipelined
+    # driver moves on device / shrinks to codec width. The two drivers
+    # are stepped ALTERNATELY inside one loop (host load drift hits
+    # both equally) and compared on median round time; the
+    # ``pipelined/serial_round_us`` ratio at n=10^4 is the regression
+    # contract — check_regression caps it at 1.0, the overlapped
+    # driver must never fall behind the serial oracle it shadows.
+    from repro.models.cnn import (apply_mlp_classifier as _apply,
+                                  init_mlp_classifier as _init)
+    flp = _fl(m=m, dpc=n // m, tau=1, q=1, pi=1)
+    basep = dataclasses.replace(base, sample_fraction=1.0,
+                                dropout_prob=0.0)
+    xb, yb = make_synthetic_classification(1600, 64, 32, seed=0)
+    txb, tyb = make_synthetic_classification(128, 64, 32, seed=1)
+    partsb = dirichlet_partition(yb, n, 0.5, 0)
+    datab = build_fl_data(xb, yb, partsb, txb, tyb,
+                          samples_per_device=96)
+    rounds = 10 if smoke else 16
+    for pop in (1_000, 10_000):
+        scenario = dataclasses.replace(basep, population=PopulationConfig(
+            clients_per_cluster=pop // m, cohort_per_cluster=3,
+            codec="int8"))
+        sims, page0, ts = {}, {}, {}
+        for tag, pipe in (("serial", False), ("pipelined", True)):
+            sims[tag] = FLSimulator(
+                lambda k: _init(k, 64, 2048, 32), _apply, flp, datab,
+                lr=0.1, batch_size=16, seed=0, scenario=scenario,
+                codec="int8", pipeline=pipe)
+            for _ in range(3):                 # compile + warm pipeline
+                sims[tag].step_round()
+            page0[tag] = sims[tag]._page_seconds
+            ts[tag] = []
+        for _ in range(rounds):
+            for tag in ("serial", "pipelined"):
+                with Timer() as t:
+                    sims[tag].step_round()
+                ts[tag].append(t.dt)
+        med = {tag: float(np.median(v)) for tag, v in ts.items()}
+        for tag in ("serial", "pipelined"):
+            sim = sims[tag]
+            page = (sim._page_seconds - page0[tag]) / rounds
+            extra = (f"rounds_per_s={1.0 / med[tag]:.2f};"
+                     f"paging_frac={min(page / med[tag], 1.0):.3f};"
+                     f"population={pop};T={sim._layout.total};"
+                     f"codec=int8;rounds={rounds}")
+            if tag == "pipelined":
+                pr = med["pipelined"] / med["serial"]
+                extra = f"pipelined/serial_round_us={pr:.4f};" + extra
+            row(f"scale_{tag}_n{pop}", med[tag] * 1e6, extra)
+    pr10k = med["pipelined"] / med["serial"]
+    if not smoke:
+        assert pr10k <= 1.0 + 1e-9, (
+            f"pipelined round slower than serial: {pr10k:.4f}")
+
 
 BENCHES = {"fig2": fig2, "fig3": fig3, "fig4": fig4, "fig5": fig5,
            "fig6": fig6, "tab1": tab1, "kern": kern, "roof": roof,

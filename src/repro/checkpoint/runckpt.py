@@ -78,6 +78,11 @@ def _capture(sim, round_idx: int, clock, hist,
         # under every codec), and the last-sync label tracker. The
         # (S,)-shaped pieces are variable-length; ckpt.py validates
         # tree *paths*, not shapes, so the structure stays fixed.
+        # A pipelined driver's in-flight page-out lands first, making
+        # the store round-complete at the captured round.
+        drain = getattr(sim, "_drain_pipeline", None)
+        if drain is not None:
+            drain()
         state["store"] = sim.store.snapshot()
         state["page_labels"] = np.asarray(sim._page_labels, np.int64)
     else:
@@ -129,6 +134,10 @@ def _assign(sim, state: Dict[str, Any], clock, hist) -> None:
     elif getattr(sim, "store", None) is not None:
         sim.store.load(state["store"])
         sim._page_labels = np.asarray(state["page_labels"], np.int64)
+        # drop any pipelined in-flight state: the device refs re-seed
+        # from the restored store at the next dispatched round
+        if getattr(sim, "_pipe", None) is not None:
+            sim._pipe = None
     else:
         sim._params = jax.tree.map(jnp.asarray, state["params"])
         sim._mom = jax.tree.map(jnp.asarray, state["mom"])

@@ -38,6 +38,7 @@ time-varying π_t — without touching engine code.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
@@ -156,6 +157,14 @@ class FLSimulator:
           differ; everything keyed is identical).
     codec: cold-row codec for the streamed store ("f32"/"f16"/"int8");
           a population scenario's ``PopulationConfig.codec`` wins.
+    pipeline: True overlaps streamed paging with compute (ISSUE 10):
+          the cold codec runs on device (``kernels/cold_codec.py``), the
+          cluster references stay device-resident, round t's page-out
+          drains asynchronously while round t+1 computes, and — every
+          engine draw being a pure function of (seed, round) — round
+          t+1's cohort is peeked and its cold rows staged/H2D'd during
+          round t. Matches the serial streamed driver bit-identically
+          at f32 (to codec tolerance at f16/int8); requires streaming.
     """
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl: FLConfig,
@@ -164,7 +173,8 @@ class FLSimulator:
                  compression=None, dp=None, scenario=None, schedule=None,
                  bank: bool = True, streaming: bool = False,
                  codec: str = "f32", store_shards: int = 1,
-                 slab_sharding=None, min_bucket: int = 1):
+                 slab_sharding=None, min_bucket: int = 1,
+                 pipeline: bool = False):
         self.fl = fl
         self.apply_fn = apply_fn
         self.sched = make_w_schedule(fl)
@@ -237,6 +247,10 @@ class FLSimulator:
             self._page_labels = self.labels.copy()
             self._peak_slab = 0
             self.last_paging = None
+            # overlapped driver state (ISSUE 10): device refs, the
+            # in-flight page-out, the prefetched next working set
+            self._pipe = None
+            self._pipe_fns = None
         elif bank:
             self.bank = self._make_bank(one, n, with_residual)
             self._buckets = cohort_buckets(n)
@@ -246,6 +260,14 @@ class FLSimulator:
             self._mom = jax.tree.map(jnp.zeros_like, self._params)
             self._residual = (jax.tree.map(jnp.zeros_like, self._params)
                               if with_residual else None)
+        self._pipeline = bool(pipeline)
+        assert not self._pipeline or self._streamed, \
+            "pipeline=True overlaps *paging* with compute — it requires " \
+            "the streamed engine (streaming=True or a population scenario)"
+        # cumulative host seconds spent paging (staging/fetch/commit/
+        # drain); clock.run_wall_clock splits eval windows into
+        # page_s/compute_s from deltas of this counter
+        self._page_seconds = 0.0
         self.last_bucket = n   # cohort capacity used by the latest round
         # -- round schedule (RoundProgram IR) -------------------------------
         # every engine round is a lowering of a RoundProgram; the static
@@ -921,6 +943,8 @@ class FLSimulator:
         callers — e.g. the wall-clock harness in core/clock.py — can
         charge the cohort per op."""
         if self._streamed:
+            if self._pipeline:
+                return self._step_round_streamed_pipelined()
             return self._step_round_streamed()
         if self.engine is not None:
             plan = self.engine.step()
@@ -1000,7 +1024,76 @@ class FLSimulator:
         assert program.mask_renorm, \
             "streamed rounds need mask-renormalized operators — " \
             "unrenormalized rows weight absent cold members"
-        fault = getattr(plan, "fault", None)
+        ws = self._working_set(plan)
+        if self.pop is None:
+            self.labels = ws["labels_now"]
+        k, S = ws["k"], ws["S"]
+        clients, ws_labels = ws["clients"], ws["ws_labels"]
+        H_t = self._scenario_h(plan)
+        from repro.core.scenario import RoundPlan, make_masked_w
+        W_i, W_e = make_masked_w(self.fl, ws_labels, ws["mask_slab"], H_t)
+        splan = RoundPlan(r, m, ws_labels, ws["mask_slab"], W_i, W_e,
+                          fault=ws["fault"], H_eff=ws["h_eff"])
+        args = self._resolve_args(program, splan, fuse=True)
+        # page-in: params from each lane's last-sync cluster reference,
+        # momentum decoded for the trainers only (cold lanes never step)
+        t0 = time.perf_counter()
+        params_rows = st.cluster_params[ws["src_labels"]]
+        mom_rows = np.zeros((S, self._layout.total), np.float32)
+        if k:
+            mom_rows[:k] = st.fetch(clients[:k])
+        slab = MB.from_rows(self._layout, params_rows, mom_rows,
+                            sharding=self._slab_sharding)
+        self._page_seconds += time.perf_counter() - t0
+        self.key, k_ = jax.random.split(self.key)
+        fn = self._get_round(
+            "streamed_pop" if self.pop is not None else "streamed",
+            program)
+        Y, M = fn(slab.params, slab.mom, k_,
+                  jnp.asarray(ws["didx"], jnp.int32),
+                  jnp.asarray(clients, jnp.int32),
+                  jnp.asarray(ws["lane"]), args)
+        jax.block_until_ready((Y, M))
+        t0 = time.perf_counter()
+        Yh = np.asarray(jax.device_get(Y), np.float32)
+        Mh = np.asarray(jax.device_get(M), np.float32)
+        # page-out: last lane of each cluster (representatives win over
+        # participants by position) carries the synced reference
+        fault = ws["fault"]
+        ref_lane = np.full(m, -1, np.int64)
+        ref_lane[ws_labels] = np.arange(S)
+        down = (fault.cluster_down if fault is not None else None)
+        refs = st.cluster_params.copy()
+        for c in range(m):
+            j = int(ref_lane[c])
+            if j < 0 or (down is not None and down[c]):
+                continue  # no working-set lane / dark cluster: stale ref
+            refs[c] = Yh[j]
+        st.update_clusters(refs)
+        if k:
+            st.commit(clients[:k], Mh[:k])
+        self._page_seconds += time.perf_counter() - t0
+        if self.pop is None:
+            # next round's page-in reads the reference of the cluster a
+            # device sat in NOW: the trailing boundary synced every row
+            self._page_labels = self.labels.copy()
+        self.last_bucket = S
+        self._peak_slab = max(self._peak_slab,
+                              2 * 4 * S * self._layout.total)
+        # paging = device↔edge traffic: each trainer downloads its row
+        # and uploads it back (references live at the edge already)
+        self.last_paging = {"rows_in": k, "rows_out": k,
+                            "bits_per_row": st.bits_per_row}
+        return plan
+
+    def _working_set(self, plan):
+        """Assemble one streamed round's working set from its plan —
+        shared verbatim by the serial and pipelined drivers (identical
+        assembly is half of their bit-identity). Pure w.r.t. engine and
+        store state; reads ``self._page_labels`` (enumerated mode), so
+        the pipelined prefetch must call it *after* the previous round
+        updated the labels."""
+        m = self.fl.num_clusters
         if self.pop is not None:
             # virtual population: cohort ids from the keyed engine, one
             # cold representative per (not fully sampled) cluster; a
@@ -1013,7 +1106,7 @@ class FLSimulator:
                  self.engine.home_cluster(reps)])
             src_labels = ws_labels
             didx = clients % self.data["xs"].shape[0]
-            h_eff = None
+            labels_now, h_eff = None, None
         else:
             # enumerated n: the scenario plan's cohort (or everyone)
             if plan is not None:
@@ -1034,7 +1127,6 @@ class FLSimulator:
             ws_labels = labels_now[clients]
             src_labels = self._page_labels[clients]
             didx = clients
-            self.labels = labels_now
         k = int(cohort.shape[0])
         S_raw = int(clients.shape[0])
         S = bucket_for(S_raw, self._buckets)
@@ -1052,54 +1144,268 @@ class FLSimulator:
             didx = np.concatenate([didx, np.repeat(didx[:1], pad)])
         lane = np.zeros(S, bool)
         lane[:k] = True
-        mask_slab = lane.astype(float)
-        H_t = self._scenario_h(plan)
-        from repro.core.scenario import RoundPlan, make_masked_w
-        W_i, W_e = make_masked_w(self.fl, ws_labels, mask_slab, H_t)
-        splan = RoundPlan(r, m, ws_labels, mask_slab, W_i, W_e,
-                          fault=fault, H_eff=h_eff)
-        args = self._resolve_args(program, splan, fuse=True)
-        # page-in: params from each lane's last-sync cluster reference,
-        # momentum decoded for the trainers only (cold lanes never step)
-        params_rows = st.cluster_params[src_labels]
-        mom_rows = np.zeros((S, self._layout.total), np.float32)
+        return {"cohort": cohort, "clients": clients,
+                "ws_labels": ws_labels, "src_labels": src_labels,
+                "didx": didx, "k": k, "S": S, "lane": lane,
+                "mask_slab": lane.astype(float),
+                "labels_now": labels_now, "h_eff": h_eff,
+                "fault": getattr(plan, "fault", None)}
+
+    # -- overlapped streamed driver (ISSUE 10) -------------------------------
+    def _peek_plan(self):
+        """Compute the NEXT round's plan without advancing the engine.
+
+        Sound because every engine draw is keyed by (seed, round,
+        stream, entity) — ``step()`` only *reassigns* ``round_index`` /
+        ``labels`` / ``speed_multipliers`` (and FaultModel is stateless)
+        — so saving those references, stepping, and restoring them
+        leaves the engine bit-identical while yielding the plan the
+        real ``step()`` will reproduce next round (asserted there)."""
+        eng = self.engine
+        if eng is None:
+            return None
+        saved = [(a, getattr(eng, a))
+                 for a in ("round_index", "labels", "speed_multipliers")
+                 if hasattr(eng, a)]
+        try:
+            plan = eng.step()
+        finally:
+            for a, v in saved:
+                setattr(eng, a, v)
+        return plan
+
+    @staticmethod
+    def _plans_match(a, b) -> bool:
+        """Prefetch-invariant check: the peeked plan equals the real one
+        (keyed draws make this structural; a mismatch means engine state
+        was perturbed between rounds)."""
+        if a is None or b is None:
+            return a is b
+        for f in ("clients", "labels", "mask"):
+            va, vb = getattr(a, f, None), getattr(b, f, None)
+            if (va is None) != (vb is None):
+                return False
+            if va is not None and not np.array_equal(np.asarray(va),
+                                                     np.asarray(vb)):
+                return False
+        return True
+
+    def _make_pipe_helpers(self):
+        """The pipelined round's pre/post jits. The CORE round stays the
+        serial driver's own compiled lowering (``_get_round``) — f32
+        bit-identity holds by construction because the same executable
+        sees the same input bits. pre/post only gather, scatter and run
+        the cold codec, all bit-exact at f32:
+
+        - pre: page-in on device — params from the resident cluster
+          references, momentum decoded from the staged encoded rows
+          after scattering in forwarded rows (clients sampled in
+          consecutive rounds, whose newest momentum exists only as the
+          previous round's device-side page-out);
+        - post: page-out on device — fold each updated cluster's synced
+          lane into the references, encode the slab's momentum so the
+          D2H transfer carries codec-width bytes."""
+        from repro.kernels import cold_codec
+        codec, segs = self.store.codec, self._layout.segments
+        shard = self._slab_sharding
+
+        # q_in/s_in are staged fresh every round and consumed only
+        # here: donating them makes the forwarding scatter in-place
+        # (CPU ignores donation and warns, so only donate off-CPU)
+        donate = (() if jax.default_backend() == "cpu" else (2, 3))
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def pre(refs, src_labels, q_in, s_in, q_prev, s_prev, src, dst):
+            q = q_in.at[dst].set(q_prev[src], mode="drop")
+            s = s_in.at[dst].set(s_prev[src], mode="drop")
+            Y0 = refs[src_labels]
+            M0 = cold_codec.decode_rows(q, s, codec, segs)
+            if shard is not None:
+                Y0 = jax.lax.with_sharding_constraint(Y0, shard)
+                M0 = jax.lax.with_sharding_constraint(M0, shard)
+            return Y0, M0
+
+        # refs must NOT be donated: the previous round's pending
+        # page-out still holds this buffer until the next drain
+        @jax.jit
+        def post(Y, M, refs, upd, lanes):
+            refs_new = jnp.where(upd[:, None], Y[lanes], refs)
+            q_out, s_out = cold_codec.encode_rows(M, codec, segs)
+            return refs_new, q_out, s_out
+
+        return pre, post
+
+    def _stage_pipelined(self, plan, r: int):
+        """Stage round ``r``'s page-in: assemble its working set, gather
+        the cohort's *encoded* cold rows (commits ≤ r-2 from the store;
+        the r-1 delta arrives by device-side forwarding at dispatch) and
+        start their H2D transfer — all while round r-1 computes."""
+        ws = self._working_set(plan)
+        k, S = ws["k"], ws["S"]
+        qc, sc = self.store.fetch_encoded(ws["cohort"])
+        # rep/pad lanes page in zero momentum, exactly like the serial
+        # driver's zero-fill beyond [:k] (zero q + zero scale decode to
+        # exact zeros under every codec). The host buffers are cached
+        # per bucket — device_put/asarray below copies them out, so the
+        # next stage may safely overwrite; only [k:] needs re-zeroing.
+        bufs = getattr(self, "_stage_bufs", None)
+        if bufs is None:
+            bufs = self._stage_bufs = {}
+        if S not in bufs:
+            bufs[S] = (np.zeros((S, self._layout.total), qc.dtype),
+                       np.zeros((S, sc.shape[1]), np.float32))
+        q, s = bufs[S]
+        q[:k] = qc
+        q[k:] = 0
+        s[:k] = sc
+        s[k:] = 0
+        if self._slab_sharding is not None:
+            ws["q"] = jax.device_put(q, self._slab_sharding)
+            ws["s"] = jax.device_put(s, self._slab_sharding)
+        else:
+            ws["q"], ws["s"] = jnp.asarray(q), jnp.asarray(s)
+        ws["plan"], ws["r"] = plan, r
+        return ws
+
+    def _drain_pipeline(self):
+        """Land the in-flight page-out (if any) in the host store:
+        blocks on the async D2H of the last dispatched round, then
+        commits its encoded momentum and mirrors the cluster references.
+        Called by the next round (overlapped by that round's compute)
+        and by every store reader — eval, checkpoint capture — so
+        observable host state is always round-complete."""
+        p = getattr(self, "_pipe", None)
+        if not p or p.get("pending") is None:
+            return
+        pend, p["pending"] = p["pending"], None
+        st = self.store
+        st.update_clusters(np.asarray(pend["refs"], np.float32))
+        k = pend["k"]
         if k:
-            mom_rows[:k] = st.fetch(clients[:k])
-        slab = MB.from_rows(self._layout, params_rows, mom_rows,
-                            sharding=self._slab_sharding)
+            st.commit_encoded(pend["cohort"],
+                              np.asarray(pend["q"])[:k],
+                              np.asarray(pend["s"], np.float32)[:k])
+
+    def _step_round_streamed_pipelined(self):
+        """One overlapped streamed round (ISSUE 10 tentpole).
+
+        Vs the serial driver, per dispatched round t the host only (a)
+        drains round t-1's encoded page-out and (b) stages round t+1's
+        page-in from the peeked plan — both overlapped by round t's
+        device compute, so steady-state round time approaches
+        max(compute, page) instead of compute + page. The cluster
+        references live on device across rounds (params never ride the
+        link per round; only the (m, T) mirror comes back), and the
+        momentum link traffic is codec-width both ways.
+
+        Delayed-commit bookkeeping: when round t+1 is staged, the store
+        holds commits ≤ t-1 (t is still in flight), so clients sampled
+        in both rounds t and t+1 get their newest momentum forwarded
+        on device from round t's encoded page-out — covering exactly
+        the missing delta. The store itself is only read by staging,
+        never by the round, so eval/checkpoint drains stay cheap."""
+        from repro.core.scenario import RoundPlan, make_masked_w
+        st = self.store
+        m = self.fl.num_clusters
+        if self._pipe is None:
+            self._pipe = {"refs": None, "pending": None,
+                          "staged": None, "prev": None}
+        if self._pipe_fns is None:
+            self._pipe_fns = self._make_pipe_helpers()
+        p = self._pipe
+        if p["refs"] is None:
+            p["refs"] = jnp.asarray(st.cluster_params, jnp.float32)
+        pre_fn, post_fn = self._pipe_fns
+        plan = self.engine.step() if self.engine is not None else None
+        r = self.round_index
+        self.round_index += 1
+        program = (self._schedule_fn(r, plan)
+                   if self._schedule_fn is not None else self._canonical)
+        self.last_program = program
+        assert not program.has_upload, \
+            "streamed rounds reject upload programs (EF residual and " \
+            "DP noise are per-device state the store does not page)"
+        assert program.mask_renorm, \
+            "streamed rounds need mask-renormalized operators — " \
+            "unrenormalized rows weight absent cold members"
+        staged, p["staged"] = p["staged"], None
+        if staged is not None:
+            assert staged["r"] == r and \
+                self._plans_match(staged["plan"], plan), \
+                "prefetched plan diverged from the engine's real draw " \
+                "(engine state was perturbed between rounds)"
+            ws = staged
+        else:
+            # cold start (first round / right after restore): stage now
+            t0 = time.perf_counter()
+            ws = self._stage_pipelined(plan, r)
+            self._page_seconds += time.perf_counter() - t0
+        if self.pop is None:
+            self.labels = ws["labels_now"]
+            self._page_labels = ws["labels_now"].copy()
+        k, S = ws["k"], ws["S"]
+        H_t = self._scenario_h(plan)
+        W_i, W_e = make_masked_w(self.fl, ws["ws_labels"],
+                                 ws["mask_slab"], H_t)
+        splan = RoundPlan(r, m, ws["ws_labels"], ws["mask_slab"], W_i,
+                          W_e, fault=ws["fault"], H_eff=ws["h_eff"])
+        args = self._resolve_args(program, splan, fuse=True)
+        # device-side forwarding: rows of the previous cohort sampled
+        # again now (their commit is still in flight); padded to a
+        # static length, OOB dst entries drop
+        src = np.zeros(S, np.int64)
+        dst = np.full(S, S, np.int64)
+        prev = p["prev"]
+        if prev is not None:
+            _, si, di = np.intersect1d(prev["cohort"], ws["cohort"],
+                                       assume_unique=True,
+                                       return_indices=True)
+            src[:si.shape[0]] = si
+            dst[:di.shape[0]] = di
+            q_prev, s_prev = prev["q"], prev["s"]
+        else:
+            q_prev = jnp.zeros((1,) + ws["q"].shape[1:], ws["q"].dtype)
+            s_prev = jnp.zeros((1,) + ws["s"].shape[1:], jnp.float32)
+        Y0, M0 = pre_fn(p["refs"],
+                        jnp.asarray(ws["src_labels"], jnp.int32),
+                        ws["q"], ws["s"], q_prev, s_prev,
+                        jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32))
         self.key, k_ = jax.random.split(self.key)
         fn = self._get_round(
             "streamed_pop" if self.pop is not None else "streamed",
             program)
-        Y, M = fn(slab.params, slab.mom, k_,
-                  jnp.asarray(didx, jnp.int32),
-                  jnp.asarray(clients, jnp.int32),
-                  jnp.asarray(lane), args)
-        Yh = np.asarray(jax.device_get(Y), np.float32)
-        Mh = np.asarray(jax.device_get(M), np.float32)
-        # page-out: last lane of each cluster (representatives win over
-        # participants by position) carries the synced reference
+        Y, M = fn(Y0, M0, k_,
+                  jnp.asarray(ws["didx"], jnp.int32),
+                  jnp.asarray(ws["clients"], jnp.int32),
+                  jnp.asarray(ws["lane"]), args)
+        # page-out on device; D2H starts now, lands at the next drain
+        fault = ws["fault"]
         ref_lane = np.full(m, -1, np.int64)
-        ref_lane[ws_labels] = np.arange(S)
-        down = (fault.cluster_down if fault is not None else None)
-        refs = st.cluster_params.copy()
-        for c in range(m):
-            j = int(ref_lane[c])
-            if j < 0 or (down is not None and down[c]):
-                continue  # no working-set lane / dark cluster: stale ref
-            refs[c] = Yh[j]
-        st.update_clusters(refs)
-        if k:
-            st.commit(clients[:k], Mh[:k])
-        if self.pop is None:
-            # next round's page-in reads the reference of the cluster a
-            # device sat in NOW: the trailing boundary synced every row
-            self._page_labels = self.labels.copy()
+        ref_lane[ws["ws_labels"]] = np.arange(S)
+        down = (np.asarray(fault.cluster_down, bool)
+                if fault is not None else np.zeros(m, bool))
+        upd = (ref_lane >= 0) & ~down
+        lanes = np.where(ref_lane >= 0, ref_lane, 0)
+        refs_new, q_out, s_out = post_fn(Y, M, p["refs"],
+                                         jnp.asarray(upd),
+                                         jnp.asarray(lanes, jnp.int32))
+        p["refs"] = refs_new
+        for a in (q_out, s_out, refs_new):
+            a.copy_to_host_async()
+        # drain round r-1 (its D2H overlapped round r's dispatch) and
+        # only then stage r+1, so staging sees commits ≤ r-1 and the
+        # forwarding delta is exactly cohort r
+        t0 = time.perf_counter()
+        self._drain_pipeline()
+        p["pending"] = {"cohort": ws["cohort"], "k": k,
+                        "q": q_out, "s": s_out, "refs": refs_new}
+        p["prev"] = {"cohort": ws["cohort"], "q": q_out, "s": s_out}
+        p["staged"] = self._stage_pipelined(self._peek_plan(), r + 1)
+        self._page_seconds += time.perf_counter() - t0
         self.last_bucket = S
         self._peak_slab = max(self._peak_slab,
                               2 * 4 * S * self._layout.total)
-        # paging = device↔edge traffic: each trainer downloads its row
-        # and uploads it back (references live at the edge already)
         self.last_paging = {"rows_in": k, "rows_out": k,
                             "bits_per_row": st.bits_per_row}
         return plan
@@ -1238,6 +1544,8 @@ class FLSimulator:
         (m, n) projection streams the flat bank once."""
         if self._streamed:
             # the streamed store's per-cluster references ARE y_t
+            # (pipelined: land the in-flight round's refs first)
+            self._drain_pipeline()
             return self._layout.unflatten_stack(
                 jnp.asarray(self.store.cluster_params))
         B = topo.assignment_matrix(self.labels, self.fl.num_clusters)
@@ -1251,6 +1559,7 @@ class FLSimulator:
     def global_model(self):
         """Device-average model x̄ as a single pytree."""
         if self._streamed:
+            self._drain_pipeline()
             # end-of-round rows are cluster-uniform, so the device
             # average is the cluster-size-weighted reference average
             sizes = (self.pop.sizes.astype(np.float64)

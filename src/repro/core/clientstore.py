@@ -34,8 +34,17 @@ page-out/page-in round trip is bit-exact, which is what makes
 killed-and-resumed streamed runs bit-identical (``RunCheckpoint``
 snapshots :meth:`ClientStore.snapshot` under fixed keys).
 
+Storage layout (PR 10): each shard is a growable contiguous *arena* —
+``(capacity, T)`` encoded rows + ``(capacity, nseg)`` scales + a dense
+``local_id -> slot`` map — so :meth:`fetch`/:meth:`commit` are single
+numpy gather/scatters instead of O(k) Python dict walks, and the
+pipelined driver's :meth:`fetch_encoded`/:meth:`commit_encoded` move
+codec-width bytes without a host decode/encode in the loop. Per-slot
+dirty bits make :meth:`snapshot` incremental: only rows committed since
+the last snapshot are re-gathered (bit-identical to a full rebuild).
+
 Sharding: the store partitions client rows ``client_id % num_shards``
-into independent per-shard maps, so the sharded engine
+into independent per-shard arenas, so the sharded engine
 (``core/sharded.py``) keeps one cold shard per bank shard and no single
 host map ever holds the whole population's rows.
 
@@ -48,7 +57,7 @@ Resident-memory formula (doctested in docs/PERFORMANCE.md):
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -94,6 +103,8 @@ class ClientStore:
     ``client_id % num_shards`` so a sharded engine keeps per-shard cold
     stores (``num_shards=1`` for the single-process engine)."""
 
+    _GROW = 64  # minimum arena/slot-map growth quantum
+
     def __init__(self, layout, num_clusters: int, init_row: np.ndarray,
                  *, codec: str = "f32", num_shards: int = 1):
         assert codec in COLD_CODECS, codec
@@ -107,15 +118,36 @@ class ClientStore:
         #: (m, T) per-cluster reference params — a cold client's row IS
         #: its cluster's reference (see module docstring)
         self.cluster_params = np.tile(row[None, :], (self.m, 1))
-        # per-shard maps: client_id -> (encoded q row, scale row)
-        self._shards: List[Dict[int, tuple]] = [
-            dict() for _ in range(self.num_shards)]
+        self._dt = cold_dtype(codec)
+        self._sw = len(layout.segments) if codec == "int8" else 0
+        self._reset_arenas()
+
+    def _reset_arenas(self) -> None:
+        ns, T = self.num_shards, self.layout.total
+        # per-shard contiguous arenas over slots [0, _size): encoded q
+        # rows, f32 scales, slot->id, per-slot dirty-since-snapshot bit
+        self._q: List[np.ndarray] = [
+            np.empty((0, T), self._dt) for _ in range(ns)]
+        self._scale: List[np.ndarray] = [
+            np.empty((0, self._sw), np.float32) for _ in range(ns)]
+        self._ids: List[np.ndarray] = [
+            np.empty((0,), np.int64) for _ in range(ns)]
+        self._dirty: List[np.ndarray] = [
+            np.empty((0,), bool) for _ in range(ns)]
+        self._size: List[int] = [0] * ns
+        # dense local-id (= client_id // num_shards) -> slot, -1 absent
+        self._slot: List[np.ndarray] = [
+            np.empty((0,), np.int64) for _ in range(ns)]
+        # cached (ids, q, scale) of the last snapshot; stale once an
+        # id is stored that the cache has never seen
+        self._snap: Tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+        self._snap_stale = True
 
     # -- bookkeeping ---------------------------------------------------------
     @property
     def num_stored(self) -> int:
         """Clients with a materialized (ever-sampled) momentum row."""
-        return sum(len(s) for s in self._shards)
+        return sum(self._size)
 
     @property
     def bits_per_row(self) -> int:
@@ -128,31 +160,133 @@ class ClientStore:
         """Cold bytes held per shard (stored rows only)."""
         per = cold_row_nbytes(self.layout.total, self.codec,
                               len(self.layout.segments))
-        return [per * len(s) for s in self._shards]
+        return [per * sz for sz in self._size]
 
     @property
     def nbytes(self) -> int:
         """Total host bytes: cluster references + stored cold rows."""
         return int(self.cluster_params.nbytes) + sum(self.shard_nbytes())
 
+    # -- arena plumbing ------------------------------------------------------
+    def _lookup(self, sh: int, local: np.ndarray) -> np.ndarray:
+        """Slots of local ids in shard ``sh`` (-1 where never stored)."""
+        m = self._slot[sh]
+        out = np.full(local.shape, -1, np.int64)
+        ok = local < m.shape[0]
+        out[ok] = m[local[ok]]
+        return out
+
+    def _ensure_slots(self, sh: int, ids: np.ndarray) -> np.ndarray:
+        """Slots for ``ids`` (unique, this shard), appending fresh
+        arena slots — and growing the arena — for unseen ids."""
+        local = ids // self.num_shards
+        m = self._slot[sh]
+        need = int(local.max()) + 1 if local.size else 0
+        if need > m.shape[0]:
+            nm = np.full(max(need, 2 * m.shape[0], self._GROW), -1,
+                         np.int64)
+            nm[:m.shape[0]] = m
+            self._slot[sh] = m = nm
+        slots = m[local]
+        fresh = slots < 0
+        n_new = int(fresh.sum())
+        if n_new:
+            start = self._size[sh]
+            end = start + n_new
+            if end > self._q[sh].shape[0]:
+                cap = max(end, 2 * self._q[sh].shape[0], self._GROW)
+                for arrs, shape in ((self._q, (cap, self.layout.total)),
+                                    (self._scale, (cap, self._sw))):
+                    grown = np.empty(shape, arrs[sh].dtype)
+                    grown[:start] = arrs[sh][:start]
+                    arrs[sh] = grown
+                gid = np.empty((cap,), np.int64)
+                gid[:start] = self._ids[sh][:start]
+                self._ids[sh] = gid
+                gd = np.zeros((cap,), bool)
+                gd[:start] = self._dirty[sh][:start]
+                self._dirty[sh] = gd
+            new_slots = np.arange(start, end, dtype=np.int64)
+            m[local[fresh]] = new_slots
+            self._ids[sh][new_slots] = ids[fresh]
+            self._size[sh] = end
+            self._snap_stale = True
+            slots = m[local]
+        return slots
+
+    def _by_shard(self, ids: np.ndarray):
+        """Yield ``(shard, positions)`` covering ``ids``."""
+        if self.num_shards == 1:
+            yield 0, slice(None)
+            return
+        sh = ids % self.num_shards
+        for s in range(self.num_shards):
+            pos = np.nonzero(sh == s)[0]
+            if pos.size:
+                yield s, pos
+
     # -- paging --------------------------------------------------------------
     def fetch(self, clients: np.ndarray) -> np.ndarray:
         """Decode the momentum rows of ``clients`` as (k, T) float32.
-        Never-stored clients decode to zeros (their exact momentum)."""
+        Never-stored clients decode to zeros (their exact momentum).
+
+        Warm-cohort fast path: when every requested row is stored, the
+        gathered rows decode straight into the output — no (k, T)
+        zero-fill memset on the all-hit path."""
         ids = np.asarray(clients, np.int64).reshape(-1)
-        out = np.zeros((ids.shape[0], self.layout.total), np.float32)
-        hit, qs, scales = [], [], []
-        for j, i in enumerate(ids):
-            row = self._shards[int(i) % self.num_shards].get(int(i))
-            if row is not None:
-                hit.append(j)
-                qs.append(row[0])
-                scales.append(row[1])
-        if hit:
-            enc = {"q": np.stack(qs), "scale": np.stack(scales)}
-            out[hit] = decode_cold_rows(enc, self.codec,
+        k, T = ids.shape[0], self.layout.total
+        if k == 0:
+            return np.zeros((0, T), np.float32)
+        if self.num_shards == 1:
+            slots = self._lookup(0, ids)
+            if (slots >= 0).all():
+                enc = {"q": self._q[0][slots],
+                       "scale": self._scale[0][slots]}
+                return decode_cold_rows(enc, self.codec,
                                         self.layout.segments)
+        parts = []
+        for s, pos in self._by_shard(ids):
+            slots = self._lookup(s, ids[pos] // self.num_shards)
+            parts.append((s, pos, slots))
+        all_hit = all((slots >= 0).all() for _, _, slots in parts)
+        out = (np.empty if all_hit else np.zeros)((k, T), np.float32)
+        for s, pos, slots in parts:
+            hit = slots >= 0
+            if not hit.any():
+                continue
+            enc = {"q": self._q[s][slots[hit]],
+                   "scale": self._scale[s][slots[hit]]}
+            dec = decode_cold_rows(enc, self.codec, self.layout.segments)
+            idx = np.arange(k)[pos][hit] if isinstance(pos, slice) \
+                else pos[hit]
+            out[idx] = dec
         return out
+
+    def fetch_encoded(self, clients: np.ndarray) \
+            -> Tuple[np.ndarray, np.ndarray]:
+        """Gather the *encoded* momentum rows of ``clients`` as
+        ``(q (k, T) codec-dtype, scale (k, nseg) f32)`` — the pipelined
+        driver's page-in payload (decoded on device by
+        ``kernels.cold_codec.decode_rows``). Never-stored clients get
+        zero q and zero scales, which decode to exact zeros."""
+        ids = np.asarray(clients, np.int64).reshape(-1)
+        k, T = ids.shape[0], self.layout.total
+        if self.num_shards == 1 and k:
+            slots = self._lookup(0, ids)
+            if (slots >= 0).all():
+                return self._q[0][slots], self._scale[0][slots]
+        q = np.zeros((k, T), self._dt)
+        scale = np.zeros((k, self._sw), np.float32)
+        for s, pos in self._by_shard(ids):
+            slots = self._lookup(s, ids[pos] // self.num_shards)
+            hit = slots >= 0
+            if not hit.any():
+                continue
+            idx = np.arange(k)[pos][hit] if isinstance(pos, slice) \
+                else pos[hit]
+            q[idx] = self._q[s][slots[hit]]
+            scale[idx] = self._scale[s][slots[hit]]
+        return q, scale
 
     def commit(self, clients: np.ndarray, rows: np.ndarray) -> None:
         """Encode and store the momentum rows of ``clients`` (page-out).
@@ -161,9 +295,25 @@ class ClientStore:
         rows = np.asarray(rows, np.float32)
         assert rows.shape == (ids.shape[0], self.layout.total)
         enc = encode_cold_rows(rows, self.codec, self.layout.segments)
-        for j, i in enumerate(ids):
-            self._shards[int(i) % self.num_shards][int(i)] = (
-                enc["q"][j], enc["scale"][j])
+        self.commit_encoded(ids, enc["q"], enc["scale"])
+
+    def commit_encoded(self, clients: np.ndarray, q: np.ndarray,
+                       scale: np.ndarray) -> None:
+        """Store already-encoded rows verbatim (page-out of the
+        pipelined driver, whose encode ran on device). Single scatter
+        per shard; committed slots are marked dirty for the
+        incremental :meth:`snapshot`."""
+        ids = np.asarray(clients, np.int64).reshape(-1)
+        q = np.asarray(q)
+        scale = np.asarray(scale, np.float32)
+        assert q.shape == (ids.shape[0], self.layout.total), q.shape
+        assert q.dtype == self._dt, (q.dtype, self._dt)
+        assert scale.shape == (ids.shape[0], self._sw), scale.shape
+        for s, pos in self._by_shard(ids):
+            slots = self._ensure_slots(s, ids[pos])
+            self._q[s][slots] = q[pos]
+            self._scale[s][slots] = scale[pos]
+            self._dirty[s][slots] = True
 
     def update_clusters(self, refs: np.ndarray) -> None:
         """Replace the per-cluster reference params (page-out)."""
@@ -175,21 +325,42 @@ class ClientStore:
     def snapshot(self) -> Dict[str, np.ndarray]:
         """Fixed-key host snapshot for ``RunCheckpoint``: stored rows
         stay *encoded*, so a save/restore round trip reproduces the
-        identical cold bytes under every codec (no re-quantization)."""
-        ids = sorted(i for s in self._shards for i in s)
-        T, nseg = self.layout.total, len(self.layout.segments)
-        dt = cold_dtype(self.codec)
-        if ids:
-            rows = [self._shards[i % self.num_shards][i] for i in ids]
-            q = np.stack([r[0] for r in rows]).astype(dt)
-            scale = np.stack([r[1] for r in rows]).astype(np.float32)
+        identical cold bytes under every codec (no re-quantization).
+
+        Incremental: the cached (ids, q, scale) arrays are patched in
+        place for slots dirtied since the last snapshot; a full
+        re-gather happens only when ids unseen by the cache appeared.
+        Either path yields bit-identical output (asserted in tests)."""
+        if self._snap is None or self._snap_stale:
+            sizes = self._size
+            all_ids = np.concatenate(
+                [self._ids[s][:sizes[s]] for s in range(self.num_shards)])
+            order = np.argsort(all_ids)
+            ids = all_ids[order]
+            q = np.concatenate(
+                [self._q[s][:sizes[s]] for s in range(self.num_shards)]
+            )[order]
+            scale = np.concatenate(
+                [self._scale[s][:sizes[s]]
+                 for s in range(self.num_shards)])[order]
+            self._snap = (ids, q, scale)
         else:
-            q = np.zeros((0, T), dt)
-            scale = np.zeros((0, nseg if self.codec == "int8" else 0),
-                             np.float32)
+            ids, q, scale = self._snap
+            for s in range(self.num_shards):
+                d = self._dirty[s][:self._size[s]]
+                if not d.any():
+                    continue
+                slots = np.nonzero(d)[0]
+                pos = np.searchsorted(ids, self._ids[s][slots])
+                q[pos] = self._q[s][slots]
+                scale[pos] = self._scale[s][slots]
+        for s in range(self.num_shards):
+            self._dirty[s][:self._size[s]] = False
+        self._snap_stale = False
+        ids, q, scale = self._snap
         return {"cluster": self.cluster_params.copy(),
-                "ids": np.asarray(ids, np.int64),
-                "mom_q": q, "mom_scale": scale}
+                "ids": ids.copy(), "mom_q": q.copy(),
+                "mom_scale": scale.copy()}
 
     def load(self, state: Dict[str, np.ndarray]) -> None:
         """Restore :meth:`snapshot` output (mirror of ``_assign``)."""
@@ -197,10 +368,17 @@ class ClientStore:
         assert cluster.shape == self.cluster_params.shape, \
             (cluster.shape, self.cluster_params.shape)
         self.cluster_params = cluster.copy()
-        self._shards = [dict() for _ in range(self.num_shards)]
+        self._reset_arenas()
         ids = np.asarray(state["ids"], np.int64)
-        q = np.asarray(state["mom_q"])
-        scale = np.asarray(state["mom_scale"], np.float32)
-        for j, i in enumerate(ids):
-            self._shards[int(i) % self.num_shards][int(i)] = (
-                q[j], scale[j])
+        q = np.asarray(state["mom_q"]).astype(self._dt)
+        scale = np.asarray(state["mom_scale"],
+                           np.float32).reshape(ids.shape[0], self._sw)
+        if ids.size:
+            self.commit_encoded(ids, q, scale)
+        # the loaded state IS the current snapshot — seed the cache
+        order = np.argsort(ids)
+        self._snap = (ids[order].copy(), q[order].copy(),
+                      scale[order].copy())
+        self._snap_stale = False
+        for s in range(self.num_shards):
+            self._dirty[s][:self._size[s]] = False

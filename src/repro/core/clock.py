@@ -474,10 +474,14 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
     RuntimeModel's own speeds.
 
     Besides the *simulated* wall clock, the history records the
-    *simulator's own* per-eval-window host seconds (``sim_s``) — the
+    *simulator's own* per-eval-window host seconds, split into
+    ``page_s`` (time the host spent paging the streamed client store —
+    fetch/stage/drain/commit, read from the sim's cumulative
+    ``_page_seconds`` counter; 0 for resident engines) and
+    ``compute_s`` (the window's remaining wall seconds) — the
     perf-trajectory instrumentation the benchmarks read to verify that,
-    e.g., a 50%-participation round really does less gradient work than a
-    full one (ModelBank cohort compaction, docs/PERFORMANCE.md).
+    e.g., the pipelined streamed driver really overlaps paging with
+    compute (docs/PERFORMANCE.md "Paging pipeline").
 
     ``async_staleness`` switches the loop to bounded-staleness execution:
     rounds run through ``sim.step_round_async`` (per-cluster phase
@@ -501,7 +505,7 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
     clock = EventClock(rt, sim.fl)
     hist: Dict[str, List[float]] = {
         "round": [], "wall_time": [], "acc": [], "loss": [],
-        "participants": [], "sim_s": []}
+        "participants": [], "page_s": [], "compute_s": []}
     rc = None
     start_round = 0
     if ckpt_dir is not None:
@@ -512,6 +516,7 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
                               staleness=async_staleness)
             start_round = int(meta["round"])
     window_t0 = time.perf_counter()
+    page0 = float(getattr(sim, "_page_seconds", 0.0))
     for r in range(start_round, rounds):
         if async_staleness is None:
             plan = sim.step_round()
@@ -573,15 +578,19 @@ def run_wall_clock(sim, rt: RuntimeModel, rounds: int, *,
             est.observe(steps, times,
                         None if plan is None else plan.mask)
         if (r + 1) % eval_every == 0:
-            sim_s = time.perf_counter() - window_t0
+            wall = time.perf_counter() - window_t0
+            page1 = float(getattr(sim, "_page_seconds", 0.0))
+            page_s = page1 - page0
             acc, loss = sim.evaluate(eval_batch)
             hist["round"].append(r + 1)
             hist["wall_time"].append(t)
             hist["acc"].append(acc)
             hist["loss"].append(loss)
             hist["participants"].append(participants)
-            hist["sim_s"].append(sim_s)
+            hist["page_s"].append(page_s)
+            hist["compute_s"].append(max(wall - page_s, 0.0))
             window_t0 = time.perf_counter()
+            page0 = float(getattr(sim, "_page_seconds", 0.0))
         if rc is not None and ckpt_every and (r + 1) % ckpt_every == 0:
             rc.save(sim, round_idx=r + 1, clock=clock, hist=hist,
                     staleness=async_staleness)

@@ -22,6 +22,13 @@ path, used by the streaming client-state store
 same per-leaf affine int8 scheme as ``_int8_leaf``, but deterministic
 rounding — a row paged out and back in must reproduce the identical
 bytes on every visit, independent of any RNG stream.
+
+As of the paging pipeline (ISSUE 10) these host codecs are the
+*oracle* path: the pipelined driver encodes/decodes cold rows on
+device via :mod:`repro.kernels.cold_codec`, whose kernels are asserted
+byte-identical to ``encode_cold_rows``/``decode_cold_rows`` in
+``tests/test_kernels.py``. The host path remains the store's default
+for the serial driver and for snapshot/restore.
 """
 from __future__ import annotations
 

@@ -640,7 +640,12 @@ class ShardedStreamedBank(FLSimulator):
     the population, bounds the communication, so no structured
     collective path is needed. Requires a scenario carrying a
     ``PopulationConfig`` (virtual clients are what make per-shard cold
-    stores meaningful)."""
+    stores meaningful).
+
+    ``pipeline=True`` (forwarded to :class:`FLSimulator`) composes with
+    the sharding: the pipelined driver stages encoded rows with
+    ``jax.device_put(..., slab_sharding)``, so prefetched cohorts land
+    row-sharded and the on-device codec kernels run per shard."""
 
     def __init__(self, init_fn: Callable, apply_fn: Callable, fl, data,
                  mesh: Mesh, **kw):

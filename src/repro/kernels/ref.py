@@ -57,3 +57,40 @@ def gossip_mix_rows_ref(W, Y):
     """Y: (n, T); returns W @ Y (row application) — the single-pass XLA
     form of the ModelBank mixing boundary on CPU/GPU hosts."""
     return (W.astype(jnp.float32) @ Y.astype(jnp.float32)).astype(Y.dtype)
+
+
+def cold_encode_ref(rows, codec, segments):
+    """Pure-jnp oracle of ``kernels.cold_codec.encode_rows`` — the
+    device sibling of ``core.compress.encode_cold_rows`` (same
+    per-FlatLayout-segment affine int8 scheme, same deterministic
+    round-half-even, identical f32/f16 casts). rows: (S, T) f32;
+    returns ``(q (S, T) codec dtype, scale (S, nseg|0) f32)``."""
+    rows = rows.astype(jnp.float32)
+    S = rows.shape[0]
+    if codec == "f32":
+        return rows, jnp.zeros((S, 0), jnp.float32)
+    if codec == "f16":
+        return rows.astype(jnp.float16), jnp.zeros((S, 0), jnp.float32)
+    assert codec == "int8", codec
+    qs, ss = [], []
+    for off, size in segments:
+        seg = rows[:, off:off + size]
+        s = jnp.maximum(jnp.max(jnp.abs(seg), axis=1), 1e-12) / 127.0
+        qs.append(jnp.clip(jnp.round(seg / s[:, None]),
+                           -127, 127).astype(jnp.int8))
+        ss.append(s)
+    return jnp.concatenate(qs, axis=1), jnp.stack(ss, axis=1)
+
+
+def cold_decode_ref(q, scale, codec, segments):
+    """Pure-jnp oracle of ``kernels.cold_codec.decode_rows``: inverse of
+    :func:`cold_encode_ref` back to (S, T) f32 (exact for f32, the
+    dequantized view for f16/int8)."""
+    if codec in ("f32", "f16"):
+        return q.astype(jnp.float32)
+    assert codec == "int8", codec
+    outs = []
+    for j, (off, size) in enumerate(segments):
+        outs.append(q[:, off:off + size].astype(jnp.float32)
+                    * scale[:, j][:, None])
+    return jnp.concatenate(outs, axis=1)

@@ -117,6 +117,14 @@ def main(argv=None):
                     help="cold-row codec of the streamed client store "
                          "(--population): f32 lossless, f16/int8 trade "
                          "round-trip error for 2x/4x smaller cold rows")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap paging with compute (--population): "
+                         "round t's page-out drains and round t+1's "
+                         "cohort prefetches while round t runs; encoded "
+                         "rows cross the host-device link and the cold "
+                         "codec runs on device (kernels/cold_codec.py). "
+                         "Bit-identical to the serial driver at f32 "
+                         "(docs/PERFORMANCE.md, paging pipeline)")
     ap.add_argument("--multihost", action="store_true",
                     help="call jax.distributed.initialize before any "
                          "device use (real-cluster entry point; "
@@ -132,8 +140,12 @@ def main(argv=None):
         if (args.schedule != "static" or args.hierarchy or args.faults
                 or args.async_staleness >= 0):
             ap.error("--population supports --scenario/--ckpt-dir/"
-                     "--resume only (no schedules, hierarchies, faults "
-                     "or async rounds over a virtual population)")
+                     "--resume/--pipeline only (no schedules, "
+                     "hierarchies, faults or async rounds over a "
+                     "virtual population)")
+    elif args.pipeline:
+        ap.error("--pipeline overlaps the streamed engine's paging; "
+                 "it requires --population")
     elif args.engine != "bank" and (args.schedule != "static"
                                     or args.scenario or args.hierarchy
                                     or args.async_staleness >= 0
@@ -257,11 +269,13 @@ def run_population_engine(args):
         mesh = make_replica_mesh(args.data_parallel)
         sim = ShardedStreamedBank(
             init, apply_mlp_classifier, fl, data, mesh, lr=args.lr,
-            batch_size=args.batch, seed=0, scenario=scenario)
+            batch_size=args.batch, seed=0, scenario=scenario,
+            pipeline=args.pipeline)
     else:
         sim = FLSimulator(
             init, apply_mlp_classifier, fl, data, lr=args.lr,
-            batch_size=args.batch, seed=0, scenario=scenario)
+            batch_size=args.batch, seed=0, scenario=scenario,
+            pipeline=args.pipeline)
     eng = sim.engine
     print(f"population engine: N={eng.population} virtual clients over "
           f"m={m} clusters (codec={args.codec}), slab cap "

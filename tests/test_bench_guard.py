@@ -24,7 +24,7 @@ def _rec(name, derived):
 
 
 def _smoke(speedup, ratio, async_ratio=0.97, fault_ratio=0.98,
-           resident_ratio=1.0):
+           resident_ratio=1.0, pipelined_ratio=0.7):
     return [
         _rec("kern_boundary_fused_femnist_cnn_n16",
              f"bank qt-boundary;speedup_vs_perleaf={speedup}x"),
@@ -36,6 +36,8 @@ def _smoke(speedup, ratio, async_ratio=0.97, fault_ratio=0.98,
              f"faulted/clean_final_acc={fault_ratio};rounds=6"),
         _rec("scale_resident_ratio",
              f"resident_n10k/n1k={resident_ratio};blurb"),
+        _rec("scale_pipelined_n10000",
+             f"pipelined/serial_round_us={pipelined_ratio};blurb"),
     ]
 
 
@@ -97,6 +99,18 @@ def test_resident_memory_growth_fails(baseline):
     failures, _ = check(_smoke(1.85, 1.39, resident_ratio=10.0),
                         baseline, 2.5)
     assert failures == ["resident_n10k/n1k"]
+
+
+def test_pipelined_slower_than_serial_fails(baseline):
+    """The pipelined driver strictly removes work from the streamed
+    round, so — like the async makespan — its ratio vs the serial
+    oracle is a tolerance-free cap: even 1.01 must fail."""
+    failures, _ = check(_smoke(1.85, 1.39, pipelined_ratio=1.01),
+                        baseline, 2.5)
+    assert failures == ["pipelined/serial_round_us"]
+    failures, _ = check(_smoke(1.85, 1.39, pipelined_ratio=1.0),
+                        baseline, 2.5)
+    assert failures == []
 
 
 def test_missing_record_is_an_error(baseline, tmp_path, capsys):

@@ -45,11 +45,13 @@ def _data(fl=FL):
     return {k: jnp.asarray(v) for k, v in d.items()}
 
 
-def _sim(*, scenario, streaming=False, codec="f32", seed=1):
+def _sim(*, scenario, streaming=False, codec="f32", seed=1,
+         pipeline=False):
     return FLSimulator(
         lambda k: init_mlp_classifier(k, 16, 32, 4),
         apply_mlp_classifier, FL, _data(), lr=0.1, batch_size=16,
-        seed=seed, scenario=scenario, streaming=streaming, codec=codec)
+        seed=seed, scenario=scenario, streaming=streaming, codec=codec,
+        pipeline=pipeline)
 
 
 def _pop_sc(n=400, codec="f32", **kw):
@@ -212,6 +214,147 @@ def test_population_smoke_memory_is_o_cohort():
     assert np.isfinite(loss) and 0.0 <= acc <= 1.0
 
 
+# -- arena store fast paths (ISSUE 10 satellites) -----------------------------
+
+def test_snapshot_incremental_dirty_patch_bit_identical():
+    """After the first full snapshot, later snapshots re-gather only
+    rows dirtied since — and must be bit-identical to a from-scratch
+    snapshot of the same logical contents, under every shard split."""
+    layout = _layout()
+    rng = np.random.default_rng(2)
+    init = rng.standard_normal(layout.total).astype(np.float32)
+    for shards in (1, 3):
+        st = ClientStore(layout, 4, init, codec="int8",
+                         num_shards=shards)
+        ids = np.array([2, 5, 9, 3000, 17])
+        rows = rng.standard_normal((5, layout.total)).astype(np.float32)
+        st.commit(ids, rows)
+        st.snapshot()                       # full rebuild, clears dirty
+        sub = np.array([5, 3000])           # dirty-patch path
+        rows2 = rng.standard_normal((2, layout.total)).astype(np.float32)
+        st.commit(sub, rows2)
+        snap = st.snapshot()
+        # oracle: a fresh store committed to the same final state takes
+        # the stale full-rebuild path unconditionally
+        oracle = ClientStore(layout, 4, init, codec="int8",
+                             num_shards=shards)
+        oracle.commit(ids, rows)
+        oracle.commit(sub, rows2)
+        ref = oracle.snapshot()
+        for k in ref:
+            np.testing.assert_array_equal(snap[k], ref[k])
+        # no commits since -> nothing re-gathered, identical arrays
+        again = st.snapshot()
+        for k in ref:
+            np.testing.assert_array_equal(again[k], snap[k])
+
+
+def test_fetch_warm_cohort_fast_path_parity():
+    """The all-hit fetch fast path (no zero-fill, single gather) must
+    return the same rows as a mixed warm/cold fetch that routes through
+    the memset path — for one shard and several."""
+    layout = _layout()
+    rng = np.random.default_rng(3)
+    init = rng.standard_normal(layout.total).astype(np.float32)
+    for shards in (1, 3):
+        st = ClientStore(layout, 4, init, codec="f16",
+                         num_shards=shards)
+        ids = np.arange(0, 60, 4)
+        rows = rng.standard_normal(
+            (ids.size, layout.total)).astype(np.float32)
+        st.commit(ids, rows)
+        warm = st.fetch(ids)                        # all-hit fast path
+        mixed = st.fetch(np.concatenate([ids, np.array([9991, 9993])]))
+        np.testing.assert_array_equal(mixed[:ids.size], warm)
+        np.testing.assert_array_equal(mixed[ids.size:], 0.0)
+        # the fast path returns freshly decoded rows, not views into
+        # the arena: mutating the result must not corrupt the store
+        warm[:] = np.nan
+        np.testing.assert_array_equal(st.fetch(ids), mixed[:ids.size])
+
+
+# -- pipelined driver (ISSUE 10 tentpole) -------------------------------------
+
+def test_pipelined_matches_serial_bit_identical_f32():
+    """The double-buffered driver — device-side codec, cross-round
+    momentum forwarding, one-round-late commits — reuses the serial
+    driver's compiled round executable, so at f32 the two trajectories
+    are bit-identical: global model, cold store bytes, page labels."""
+    ser = _sim(scenario=_pop_sc())
+    pip = _sim(scenario=_pop_sc(), pipeline=True)
+    for _ in range(6):
+        ser.step_round()
+        pip.step_round()
+    for a, b in zip(_leaves(ser.global_model()),
+                    _leaves(pip.global_model())):
+        np.testing.assert_array_equal(a, b)
+    sa, sb = ser.store.snapshot(), pip.store.snapshot()
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k])
+    np.testing.assert_array_equal(ser._page_labels, pip._page_labels)
+    assert pip._page_seconds > 0.0
+
+
+def test_pipelined_matches_serial_int8_close():
+    """Under the lossy int8 codec the device kernels round-trip through
+    the same fixed points as the host codec; tiny divergence can still
+    accumulate through requantized momentum, so: close, not equal."""
+    ser = _sim(scenario=_pop_sc(codec="int8"), codec="int8")
+    pip = _sim(scenario=_pop_sc(codec="int8"), codec="int8",
+               pipeline=True)
+    for _ in range(5):
+        ser.step_round()
+        pip.step_round()
+    for a, b in zip(_leaves(ser.global_model()),
+                    _leaves(pip.global_model())):
+        np.testing.assert_allclose(a, b, atol=5e-3)
+
+
+def test_pipelined_streamed_matches_resident_at_n16():
+    """Mode A parity, pipelined: the overlapped pager over the
+    enumerated n=16 fleet reproduces the serial streamed driver
+    bit-identically (f32) and the resident engine to float tolerance."""
+    res = _sim(scenario=MOBILE, streaming=False)
+    ser = _sim(scenario=MOBILE, streaming=True)
+    pip = _sim(scenario=MOBILE, streaming=True, pipeline=True)
+    for _ in range(4):
+        res.step_round()
+        ser.step_round()
+        pip.step_round()
+    for a, b in zip(_leaves(ser.global_model()),
+                    _leaves(pip.global_model())):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(_leaves(res.global_model()),
+                    _leaves(pip.global_model())):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+    np.testing.assert_array_equal(ser._page_labels, pip._page_labels)
+
+
+def test_pipelined_kill_and_resume_bit_identical(tmp_path):
+    """RunCheckpoint drains the in-flight page-out before capturing, so
+    a pipelined run killed at round 3 resumes bit-identically — and
+    matches the serial trajectory end to end."""
+    ref = _sim(scenario=_pop_sc())
+    for _ in range(6):
+        ref.step_round()
+    rc = RunCheckpoint(str(tmp_path))
+    killed = _sim(scenario=_pop_sc(), pipeline=True)
+    for _ in range(3):
+        killed.step_round()
+    rc.save(killed, round_idx=3)
+    fresh = _sim(scenario=_pop_sc(), pipeline=True)
+    meta = rc.restore(fresh)
+    assert meta["round"] == 3 and meta["engine"] == "streamed"
+    for _ in range(3, 6):
+        fresh.step_round()
+    for a, b in zip(_leaves(ref.global_model()),
+                    _leaves(fresh.global_model())):
+        np.testing.assert_array_equal(a, b)
+    sa, sb = ref.store.snapshot(), fresh.store.snapshot()
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k])
+
+
 NDEV = 8
 
 
@@ -245,3 +388,37 @@ def test_sharded_streamed_bank_matches_single_process():
     assert all(b % NDEV == 0 for b in shd._buckets)
     assert shd.peak_slab_bytes <= resident_slab_nbytes(
         max(shd._buckets), shd._layout.total)
+
+
+@pytest.mark.multidevice
+@pytest.mark.skipif(
+    jax.device_count() < NDEV,
+    reason=f"needs {NDEV} devices; run under XLA_FLAGS="
+           f"--xla_force_host_platform_device_count={NDEV} "
+           f"(the CI multidevice lane does)")
+def test_sharded_streamed_pipelined_matches_serial():
+    """Pipelined ShardedStreamedBank: prefetched cohorts land
+    row-sharded via device_put and the codec kernels run per shard —
+    the trajectory must stay bit-identical (f32) to the serial sharded
+    driver, which shares the same compiled round executable."""
+    from repro.core.sharded import ShardedStreamedBank
+    from repro.launch.mesh import make_replica_mesh
+    sc = _pop_sc(n=400)
+
+    def mk(pipeline):
+        return ShardedStreamedBank(
+            lambda k: init_mlp_classifier(k, 16, 32, 4),
+            apply_mlp_classifier, FL, _data(), make_replica_mesh(NDEV),
+            lr=0.1, batch_size=16, seed=1, scenario=sc,
+            pipeline=pipeline)
+
+    ser, pip = mk(False), mk(True)
+    for _ in range(4):
+        ser.step_round()
+        pip.step_round()
+    for a, b in zip(_leaves(ser.global_model()),
+                    _leaves(pip.global_model())):
+        np.testing.assert_array_equal(a, b)
+    sa, sb = ser.store.snapshot(), pip.store.snapshot()
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k])

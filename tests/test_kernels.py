@@ -110,3 +110,87 @@ def test_gossip_mix_tree_matches_dense_mix():
     exp = mix(W, params)
     for g, e in zip(jax.tree.leaves(got), jax.tree.leaves(exp)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(e), atol=1e-5)
+
+
+# -- cold-codec kernels (streamed paging path) -------------------------------
+
+_SEGMENTS = ((0, 100), (100, 37), (137, 263))   # irregular FlatLayout-style
+
+
+def _cold_rows(S=13, T=400, seed=7):
+    rng = np.random.default_rng(seed)
+    rows = (rng.standard_normal((S, T)) * 3).astype(np.float32)
+    rows[2] = 0.0                      # all-zero row: the 1e-12 scale floor
+    rows[5, :100] = 1e-9               # near-zero segment
+    return rows
+
+
+@pytest.mark.parametrize("codec", ["f32", "f16", "int8"])
+def test_cold_codec_kernel_matches_host_codec(codec):
+    """Pallas encode/decode (interpret) is byte-identical to the host
+    oracle in core/compress.py — the property that makes device-side
+    paging a drop-in for the PR 9 host codec."""
+    from repro.core.compress import decode_cold_rows, encode_cold_rows
+    from repro.kernels import cold_codec
+    rows = _cold_rows()
+    host = encode_cold_rows(rows, codec, _SEGMENTS)
+    for kw in (dict(use_pallas=False),
+               dict(use_pallas=True, interpret=True)):
+        q, s = cold_codec.encode_rows(jnp.asarray(rows), codec,
+                                      _SEGMENTS, **kw)
+        assert np.asarray(q).dtype == host["q"].dtype
+        np.testing.assert_array_equal(np.asarray(q), host["q"])
+        np.testing.assert_allclose(np.asarray(s), host["scale"],
+                                   rtol=1e-7)
+        dec = cold_codec.decode_rows(q, s, codec, _SEGMENTS, **kw)
+        np.testing.assert_allclose(
+            np.asarray(dec), decode_cold_rows(host, codec, _SEGMENTS),
+            atol=1e-6)
+
+
+@pytest.mark.parametrize("codec,tol", [("f32", 0.0), ("f16", 1e-3),
+                                       ("int8", 4e-2)])
+def test_cold_codec_kernel_roundtrip_error_bounds(codec, tol):
+    """interpret-mode decode(encode(x)) stays within the codec's bound
+    (exact for f32; f16 ~2^-11 relative; int8 scale/2 per segment)."""
+    from repro.kernels import cold_codec
+    rows = _cold_rows(S=9)
+    q, s = cold_codec.encode_rows(jnp.asarray(rows), codec, _SEGMENTS,
+                                  use_pallas=True, interpret=True)
+    dec = np.asarray(cold_codec.decode_rows(q, s, codec, _SEGMENTS,
+                                            use_pallas=True,
+                                            interpret=True))
+    if codec == "f32":
+        np.testing.assert_array_equal(dec, rows)
+        return
+    err = np.abs(dec - rows)
+    assert err.max() <= tol * max(1.0, np.abs(rows).max()), err.max()
+    # re-quantization fixed point: a decoded row re-encodes to itself
+    q2, s2 = cold_codec.encode_rows(jnp.asarray(dec), codec, _SEGMENTS,
+                                    use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+
+
+def test_quantize_int8_blocked_matches_cold_codec():
+    """The uplink quantizer (kernels/quantize.py) and the cold codec
+    share one affine scheme: per-1024-block quantization of a flat row
+    equals encode_cold_rows over a blocked single-row layout."""
+    from repro.core.compress import encode_cold_rows
+    from repro.kernels.quantize import (dequantize_int8_blocked,
+                                        quantize_int8_blocked)
+    T, block = 4096, 1024
+    rng = np.random.default_rng(11)
+    x = (rng.standard_normal(T) * 2).astype(np.float32)
+    codes, scales = quantize_int8_blocked(jnp.asarray(x), block=block,
+                                          interpret=True)
+    # blocks of the flat vector == rows of a (nb, block) single-segment
+    # layout: per-row scale IS the per-block scale
+    host = encode_cold_rows(x.reshape(-1, block), "int8",
+                            ((0, block),))
+    np.testing.assert_array_equal(
+        np.asarray(codes).reshape(-1, block), host["q"])
+    np.testing.assert_allclose(np.asarray(scales), host["scale"][:, 0],
+                               rtol=1e-7)
+    deq = dequantize_int8_blocked(codes, scales, block=block)
+    np.testing.assert_allclose(np.asarray(deq), x,
+                               atol=np.asarray(scales).max() / 2 + 1e-7)

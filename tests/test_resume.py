@@ -54,9 +54,11 @@ def _params_np(sim):
 
 def _replayable(hist):
     """Everything in a history that resume must reproduce bitwise —
-    i.e. all of it except ``sim_s``, the *host* wall-seconds
-    instrumentation (real elapsed time, legitimately nondeterministic)."""
-    return {k: v for k, v in hist.items() if k != "sim_s"}
+    i.e. all of it except ``page_s``/``compute_s``, the *host*
+    wall-seconds instrumentation (real elapsed time, legitimately
+    nondeterministic)."""
+    return {k: v for k, v in hist.items()
+            if k not in ("page_s", "compute_s")}
 
 
 def _run(tmpdir, *, kill_at=None, rounds=8, staleness=None, **simkw):
